@@ -1,0 +1,57 @@
+"""Kernel-level microbenchmarks: split-softmax attention and int8 GEMM.
+
+Wall-clock on this host (XLA paths; the Pallas kernels target TPU and are
+validated in interpret mode).  Derived column reports achieved GFLOP/s so the
+numbers are comparable across iterations of the perf loop.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import split_softmax as ss
+from repro.core.lut import LUTConfig
+from repro.kernels import ops
+
+
+def _time(fn, *args, iters: int = 3) -> float:
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rng = np.random.default_rng(0)
+    cfg = LUTConfig(scale_z=4.0 / 127)
+    el, rl = ss.make_luts(cfg)
+    s = jnp.float32(0.01)
+    rows = []
+    for n in (512, 1024, 2048):
+        q = rng.integers(-128, 128, (1, 4, n, 64)).astype(np.int8)
+        k = rng.integers(-128, 128, (1, 4, n, 64)).astype(np.int8)
+        v = rng.integers(-128, 128, (1, 4, n, 64)).astype(np.int8)
+        fn = jax.jit(lambda q, k, v: ops.splitmax_attention(
+            q, k, v, s, s, s, el, rl, cfg=cfg, causal=True, impl="xla"))
+        us = _time(fn, q, k, v)
+        flops = 4 * 4 * n * n * 64 * 0.5  # causal
+        rows.append((f"attn.splitmax_n{n}", us,
+                     f"{flops / us / 1e3:.1f} GFLOP/s (host XLA)"))
+    for m in (512, 1024):
+        x = rng.integers(-128, 128, (m, m)).astype(np.int8)
+        w = rng.integers(-128, 128, (m, m)).astype(np.int8)
+        fn = jax.jit(lambda x, w: ops.int8_matmul(x, w, impl="ref"))
+        us = _time(fn, x, w)
+        rows.append((f"gemm.int8_{m}", us,
+                     f"{2 * m**3 / us / 1e3:.1f} GOP/s (host XLA)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, val, derived in run():
+        print(f"{name},{val:.1f},{derived}")

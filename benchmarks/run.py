@@ -1,0 +1,46 @@
+"""Benchmark harness: one section per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows (value is us_per_call for timing
+benches, the metric itself for model-based benches).
+
+  * energy_model      — Fig 8 / Fig 9 / Table I (TOPS/W, TOPS/mm2)
+  * softmax_latency   — §V-B 33% split-softmax latency reduction
+  * softmax_accuracy  — Fig 11 (float vs int8-LUT accuracy delta)
+  * attention_bench   — kernel microbenchmarks (host wall-clock)
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: energy,latency,accuracy,attention")
+    ap.add_argument("--accuracy-steps", type=int, default=120)
+    args = ap.parse_args()
+    which = set(args.only.split(",")) if args.only else {
+        "energy", "latency", "accuracy", "attention"}
+
+    rows = []
+    if "energy" in which:
+        from benchmarks import energy_model
+        rows += energy_model.run()
+    if "latency" in which:
+        from benchmarks import softmax_latency
+        rows += softmax_latency.run()
+    if "accuracy" in which:
+        from benchmarks import softmax_accuracy
+        rows += softmax_accuracy.run(steps=args.accuracy_steps)
+    if "attention" in which:
+        from benchmarks import attention_bench
+        rows += attention_bench.run()
+
+    print("name,value,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.5f},{derived}")
+    if "energy" in which:
+        from benchmarks import energy_model
+        energy_model.print_table1()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Fig.-11-style accuracy study: float softmax vs the deployed int8 LUT
+datapath on a model trained in-framework (offline stand-in for the paper's
+TinyLlama + lm-eval-harness evaluation).
+
+Run:  PYTHONPATH=src:. python examples/accuracy_study.py [--steps 300]
+"""
+import argparse
+
+from benchmarks import softmax_accuracy
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+    for name, val, derived in softmax_accuracy.run(steps=args.steps):
+        print(f"{name:28s} {val:10.5f}   {derived}")

@@ -1,0 +1,25 @@
+"""Lower + compile one (arch x shape) cell on the 512-chip multi-pod mesh and
+print its memory/cost/roofline analysis — the single-cell view of what
+``python -m repro.launch.dryrun`` sweeps.
+
+Run:  PYTHONPATH=src python examples/multi_pod_lower.py --arch olmo_1b \
+          --shape decode_32k
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse  # noqa: E402
+import json      # noqa: E402
+
+from repro.launch.dryrun import dryrun_cell  # noqa: E402
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo_1b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--single-pod", action="store_true")
+    args = ap.parse_args()
+    report = dryrun_cell(args.arch, args.shape,
+                         multi_pod=not args.single_pod, scan_layers=True)
+    print(json.dumps(report, indent=2, default=float))

@@ -1,0 +1,18 @@
+"""End-to-end serving driver (the paper is an inference accelerator, so the
+end-to-end example is batched serving through the int8 LUT datapath).
+
+Prefill populates the int8 KV cache (K/V resident quantized, as in the CIM
+array); batched decode streams tokens through the split-softmax kernel path;
+a continuous-batching scheduler keeps slots full.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py [--requests 16]
+(defaults use the reduced tinyllama config so it runs on CPU in ~a minute)
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    argv = sys.argv[1:] or []
+    serve.main(["--arch", "tinyllama_1p1b", "--smoke", "--requests", "8",
+                "--slots", "4", "--prompt-len", "32", "--gen", "16"] + argv)

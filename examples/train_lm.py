@@ -1,0 +1,41 @@
+"""Training example: fakequant (QAT) attention training with checkpointing,
+preemption handling and straggler watching — the production train driver on
+a configurable model.
+
+Default runs the reduced config for a quick CPU demonstration:
+
+    PYTHONPATH=src python examples/train_lm.py
+
+The ~100M-parameter few-hundred-step variant (hours on CPU; the shape the
+framework targets on real chips):
+
+    PYTHONPATH=src python examples/train_lm.py --full
+
+Resume after interruption by re-running the same command: the checkpoint
+manager restores params/optimizer/step and the stateless-seeded pipeline
+continues the exact token stream.
+"""
+import argparse
+import sys
+
+from repro.launch import train
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="~100M params x 300 steps (slow on CPU)")
+    ap.add_argument("--ckpt-dir", default="/tmp/cimple_train_ckpt")
+    args, rest = ap.parse_known_args()
+    if args.full:
+        # olmo-1b reduced to ~100M: the driver's --smoke flag uses the
+        # arch's reduced config; for the 100M variant we pass the full
+        # tinyllama config with small batch/seq so it fits host memory.
+        train.main(["--arch", "tinyllama_1p1b", "--steps", "300",
+                    "--batch", "8", "--seq", "256",
+                    "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "50"]
+                   + rest)
+    else:
+        train.main(["--arch", "tinyllama_1p1b", "--smoke", "--steps", "60",
+                    "--batch", "8", "--seq", "128",
+                    "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "20"]
+                   + rest)

@@ -1,0 +1,37 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get_arch(name)`` returns the :class:`repro.configs.base.ArchSpec` holding
+the full production config, the reduced smoke config, the applicable input
+shapes and ``input_specs`` builders for the dry-run.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ArchSpec
+
+ARCH_IDS: List[str] = [
+    "chameleon_34b",
+    "zamba2_2p7b",
+    "mistral_nemo_12b",
+    "olmo_1b",
+    "deepseek_coder_33b",
+    "deepseek_67b",
+    "seamless_m4t_medium",
+    "falcon_mamba_7b",
+    "mixtral_8x22b",
+    "deepseek_moe_16b",
+    # the paper's own evaluation model
+    "tinyllama_1p1b",
+]
+
+
+def get_arch(name: str) -> ArchSpec:
+    name = name.replace("-", "_").replace(".", "p")
+    mod = importlib.import_module(f"repro.configs.{name}")
+    return mod.ARCH
+
+
+def all_archs() -> Dict[str, ArchSpec]:
+    return {a: get_arch(a) for a in ARCH_IDS}

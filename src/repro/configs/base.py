@@ -1,0 +1,110 @@
+"""ArchSpec: architecture + shape grid + dry-run input specs.
+
+The four assigned LM shapes:
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> serve prefill
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (1 token, KV 32k)
+  long_500k    seq 524,288 global_batch 1     -> serve_step; SUB-QUADRATIC
+               attention required: runs only for ssm/hybrid/SWA archs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    config: ModelConfig
+    smoke: ModelConfig                       # reduced same-family config
+    skip_shapes: Dict[str, str] = dataclasses.field(default_factory=dict)
+    source: str = ""                         # citation tag from the pool
+
+    @property
+    def name(self) -> str:
+        return self.config.name
+
+    def shapes(self):
+        return {k: v for k, v in SHAPES.items() if k not in self.skip_shapes}
+
+    # ---------------- dry-run input specs (no allocation) -----------------
+    def input_specs(self, shape_name: str) -> Dict:
+        """ShapeDtypeStruct stand-ins for every model input of this cell."""
+        cell = SHAPES[shape_name]
+        cfg = self.config
+        b, s = cell.global_batch, cell.seq_len
+        i32 = jnp.int32
+        if cfg.family == "encdec":
+            if cell.kind == "train":
+                return {
+                    "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   cfg.compute_dtype),
+                    "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32),
+                }
+            if cell.kind == "prefill":
+                return {
+                    "frames": jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                                   cfg.compute_dtype),
+                    "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                }
+            # decode: one decoder token vs caches of length s
+            return {"token": jax.ShapeDtypeStruct((b,), i32)}
+        if cell.kind == "train":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "labels": jax.ShapeDtypeStruct((b, s), i32)}
+        if cell.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+        return {"token": jax.ShapeDtypeStruct((b,), i32)}
+
+    def cache_specs(self, shape_name: str) -> Optional[Dict]:
+        """ShapeDtypeStructs of the decode cache for decode cells."""
+        cell = SHAPES[shape_name]
+        if cell.kind != "decode":
+            return None
+        cfg = self.config
+        from repro.models import encdec as E
+        from repro.models import transformer as T
+        if cfg.family == "encdec":
+            fn = lambda: E.make_cache(cfg, cell.global_batch,
+                                      self.cache_len(cell), enc_len=4096)
+        else:
+            fn = lambda: T.make_cache(cfg, cell.global_batch,
+                                      self.cache_len(cell))
+        return jax.eval_shape(fn)
+
+    def cache_len(self, cell: ShapeCell) -> int:
+        """KV cache allocation length.  SWA archs use a *ring buffer* of
+        exactly ``window`` slots (window must be 128-aligned): it always holds
+        precisely the attendable positions, so decode needs no window mask and
+        the 500k cell stays sub-quadratic in both compute and memory."""
+        cfg = self.config
+        if cfg.window is not None:
+            assert cfg.window % 128 == 0, cfg.window
+            return min(cell.seq_len, cfg.window)
+        return cell.seq_len
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

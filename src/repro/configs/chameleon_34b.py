@@ -1,0 +1,30 @@
+"""chameleon-34b — early-fusion VLM, VQ image tokens [arXiv:2405.09818].
+
+Backbone only (per assignment): image content arrives as VQ token ids inside
+the 65536-entry vocabulary; the VQ-VAE tokenizer is a stub
+(``models/frontend.py``).  Chameleon uses query-key normalization for
+training stability — ``qk_norm=True``.
+"""
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chameleon-34b", family="dense",
+    n_layers=48, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=22016, vocab_size=65536,
+    norm="rmsnorm", act="silu", qk_norm=True,
+    rope_theta=1e4, max_seq=32768, dtype="bfloat16",
+)
+
+SMOKE = ModelConfig(
+    name="chameleon-smoke", family="dense",
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=2, head_dim=16,
+    d_ff=256, vocab_size=512, qk_norm=True, max_seq=64,
+)
+
+ARCH = ArchSpec(
+    config=CONFIG, smoke=SMOKE,
+    skip_shapes={"long_500k": "pure full attention (quadratic prefill, "
+                              "unbounded KV) — skipped per assignment"},
+    source="[arXiv:2405.09818; unverified]",
+)

@@ -1,0 +1,30 @@
+"""falcon-mamba-7b — pure Mamba-1 SSM, attention-free [arXiv:2410.05355].
+
+No softmax anywhere -> the paper's split-softmax technique is inapplicable
+to this architecture (DESIGN.md §Arch-applicability); the arch still runs on
+the full substrate (int8 CIM GEMMs for projections, chunked selective scan).
+O(1) state => the 500k cell runs.
+"""
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=1, n_kv_heads=1,
+    d_ff=0, vocab_size=65024,
+    ssm=SSMConfig(kind="mamba1", d_state=16, d_conv=4, expand=2, chunk=256),
+    norm="rmsnorm", max_seq=524288, tie_embeddings=False, dtype="bfloat16",
+)
+
+SMOKE = ModelConfig(
+    name="falcon-mamba-smoke", family="ssm",
+    n_layers=3, d_model=64, n_heads=1, n_kv_heads=1, d_ff=0, vocab_size=512,
+    ssm=SSMConfig(kind="mamba1", d_state=8, chunk=8),
+    tie_embeddings=False, max_seq=64,
+)
+
+ARCH = ArchSpec(
+    config=CONFIG, smoke=SMOKE,
+    skip_shapes={},
+    source="[arXiv:2410.05355; unverified]",
+)

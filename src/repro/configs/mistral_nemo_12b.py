@@ -1,0 +1,23 @@
+"""mistral-nemo-12b — dense GQA, 128k context [hf:mistralai/Mistral-Nemo-Base-2407]."""
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-nemo-12b", family="dense",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size=131072,
+    norm="rmsnorm", act="silu", rope_theta=1e6, max_seq=131072,
+    tie_embeddings=False, dtype="bfloat16",
+)
+
+SMOKE = ModelConfig(
+    name="mistral-nemo-smoke", family="dense",
+    n_layers=2, d_model=128, n_heads=8, n_kv_heads=2, head_dim=16,
+    d_ff=256, vocab_size=512, tie_embeddings=False, max_seq=64,
+)
+
+ARCH = ArchSpec(
+    config=CONFIG, smoke=SMOKE,
+    skip_shapes={"long_500k": "pure full attention — skipped per assignment"},
+    source="[hf:mistralai/Mistral-Nemo-Base-2407; hf]",
+)

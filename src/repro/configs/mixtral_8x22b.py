@@ -1,0 +1,33 @@
+"""mixtral-8x22b — 8-expert top-2 MoE with sliding-window attention
+[arXiv:2401.04088].
+
+SWA (window 4096) bounds the KV footprint: decode uses a ring-buffer cache of
+exactly ``window`` slots, making the 500k cell sub-quadratic — it runs.
+"""
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b", family="moe",
+    n_layers=56, d_model=6144, n_heads=48, n_kv_heads=8, head_dim=128,
+    d_ff=16384, vocab_size=32768,
+    moe=MoEConfig(n_experts=8, top_k=2, d_ff_expert=16384,
+                  capacity_factor=1.25),
+    window=4096,
+    norm="rmsnorm", act="silu", rope_theta=1e6, max_seq=524288,
+    tie_embeddings=False, dtype="bfloat16",
+)
+
+SMOKE = ModelConfig(
+    name="mixtral-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=512,
+    moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=128),
+    window=32, tie_embeddings=False, max_seq=64,
+)
+
+ARCH = ArchSpec(
+    config=CONFIG, smoke=SMOKE,
+    skip_shapes={},
+    source="[arXiv:2401.04088; hf]",
+)

@@ -1,0 +1,35 @@
+"""zamba2-2.7b — Mamba2 backbone + one shared attention block [arXiv:2411.15242].
+
+54 Mamba2 blocks; a single *shared* full-attention + MLP block (one parameter
+set) is invoked every 6 blocks on concat(hidden, embeddings).  The paper's
+split softmax applies to the shared attention invocations; the Mamba2 blocks
+are attention-free (DESIGN.md §Arch-applicability).  SSM state is O(1) in
+sequence length, so the 500k cell runs.
+"""
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32, head_dim=80,
+    d_ff=10240, vocab_size=32000,
+    ssm=SSMConfig(kind="mamba2", d_state=64, d_conv=4, expand=2,
+                  headdim=64, chunk=256),
+    hybrid_attn_every=6,
+    norm="rmsnorm", act="silu", rope_theta=1e4, max_seq=524288,
+    dtype="bfloat16",
+)
+
+SMOKE = ModelConfig(
+    name="zamba2-smoke", family="hybrid",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=512,
+    ssm=SSMConfig(kind="mamba2", d_state=8, headdim=16, chunk=8),
+    hybrid_attn_every=2, max_seq=64,
+)
+
+ARCH = ArchSpec(
+    config=CONFIG, smoke=SMOKE,
+    skip_shapes={},
+    source="[arXiv:2411.15242; hf]",
+)

@@ -1,0 +1,145 @@
+"""CIMpleAttention — the paper's attention datapath as a composable primitive.
+
+Three execution modes, one numerics story:
+
+  * ``"float"``     — 3-pass safe-softmax attention (the paper's baseline,
+                      PyTorch-LogSoftmax-equivalent).
+  * ``"fakequant"`` — training mode (QAT): scores snap to the int8 grid via a
+                      straight-through estimator and softmax uses the static
+                      ``z_quant_max`` ceiling instead of the row max — the
+                      differentiable twin of the deployed LUT datapath.
+  * ``"int8"``      — deployment mode: Q/K/V quantized to int8, scores through
+                      the 32b->8b requant unit, exp + reciprocal LUTs, split
+                      numerator/denominator accumulation (Pallas kernels on
+                      TPU, the same math via XLA elsewhere).
+
+The mode is a config switch, so a model trained with ``fakequant`` serves with
+``int8`` — that is the point of the paper's |accuracy drop| <= 0.6% claim, and
+benchmarks/softmax_accuracy.py measures exactly this transition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut as lut_lib
+from repro.core import quantization as qlib
+from repro.core import split_softmax as ss
+from repro.core.lut import LUTConfig
+from repro.kernels import blocked as blocked_lib
+from repro.kernels import ops
+from repro.kernels import ref as ref_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    """Static attention configuration (hashable; safe as a jit static arg)."""
+    mode: str = "fakequant"            # float | fakequant | int8
+    scale_z: float = 8.0 / 127         # score quant scale (clip ~ +-8)
+    window: Optional[int] = None       # sliding-window size (SWA), None = full
+    causal: bool = True
+    impl: str = "auto"                 # kernel dispatch (see kernels/ops.py)
+    lut_mode: str = "onehot"
+    exact_recip: bool = False
+    block_q: int = 128
+    block_k: int = 128
+    # perf levers (baseline = paper-faithful defaults; see §Perf)
+    score_dtype: str = "float32"       # f32 | bfloat16 score chain
+    triangular: bool = False           # causal triangular chunk schedule
+
+    @property
+    def lut_config(self) -> LUTConfig:
+        return LUTConfig(scale_z=self.scale_z)
+
+
+@functools.lru_cache(maxsize=32)
+def _luts_for(scale_z: float):
+    """LUT pair as *numpy* host constants — cached device arrays created
+    inside a traced scope would leak tracers into later traces."""
+    cfg = LUTConfig(scale_z=scale_z)
+    return lut_lib.build_exp_lut(cfg), lut_lib.build_recip_lut(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence attention (training / prefill / encoder)
+# ---------------------------------------------------------------------------
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, spec: AttentionSpec,
+              *, kv_valid_len: Optional[jax.Array] = None,
+              mask: Optional[jax.Array] = None) -> jax.Array:
+    """(B,Hq,Sq,D) x (B,Hkv,Sk,D) -> (B,Hq,Sq,D), dtype of q.
+
+    Float inputs; quantization (when the mode asks for it) happens inside,
+    with absmax calibration under stop-gradient — i.e. what a calibration
+    pass over the deployed activations produces.
+    """
+    in_dtype = q.dtype
+    if spec.mode == "float":
+        out = ref_lib.safe_softmax_attention_ref(
+            q, k, v, causal=spec.causal, window=spec.window, mask=mask)
+        return out.astype(in_dtype)
+
+    if spec.mode == "fakequant":
+        # blocked scan + remat: production training path (O(Sq*block_k)
+        # score memory); the einsum twin in split_softmax.py is its oracle.
+        out = blocked_lib.blocked_fakequant_attention(
+            q, k, v, spec.lut_config, causal=spec.causal,
+            window=spec.window, kv_valid_len=kv_valid_len,
+            block_k=max(spec.block_k, 512),
+            score_dtype=jnp.dtype(spec.score_dtype),
+            triangular=spec.triangular)
+        return out.astype(in_dtype)
+
+    assert spec.mode == "int8", spec.mode
+    s_q = jax.lax.stop_gradient(qlib.absmax_scale(q))
+    s_k = jax.lax.stop_gradient(qlib.absmax_scale(k))
+    s_v = jax.lax.stop_gradient(qlib.absmax_scale(v))
+    exp_lut, recip_lut = _luts_for(spec.scale_z)
+    out = ops.splitmax_attention(
+        qlib.quantize(q, s_q), qlib.quantize(k, s_k), qlib.quantize(v, s_v),
+        s_q, s_k, s_v, exp_lut, recip_lut, cfg=spec.lut_config,
+        causal=spec.causal, window=spec.window, kv_valid_len=kv_valid_len,
+        block_q=spec.block_q, block_k=spec.block_k, lut_mode=spec.lut_mode,
+        exact_recip=spec.exact_recip, impl=spec.impl)
+    return out.astype(in_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (one token vs quantized KV cache) — paper Eq. 3
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache_q: jax.Array, v_cache_q: jax.Array,
+                     s_k: jax.Array, s_v: jax.Array, cache_len: jax.Array,
+                     spec: AttentionSpec) -> jax.Array:
+    """(B,Hq,D) query vs int8 (B,Hkv,S,D) caches -> (B,Hq,D).
+
+    The cache *is* int8 (CIMple stores K and V in the CIM array in int8 with
+    static scales); float/fakequant modes dequantize it for their baselines.
+    """
+    in_dtype = q.dtype
+    if spec.mode in ("float", "fakequant"):
+        kf = qlib.dequantize(k_cache_q, s_k)
+        vf = qlib.dequantize(v_cache_q, s_v)
+        s_max = kf.shape[2]
+        kpos = jnp.arange(s_max)[None, :]
+        valid = kpos < cache_len[:, None]
+        if spec.window is not None:
+            valid &= kpos > cache_len[:, None] - 1 - spec.window
+        out = ref_lib.safe_softmax_attention_ref(
+            q[:, :, None, :], kf, vf, causal=False,
+            mask=valid[:, None, None, :])[:, :, 0, :]
+        return out.astype(in_dtype)
+
+    assert spec.mode == "int8", spec.mode
+    s_q = jax.lax.stop_gradient(qlib.absmax_scale(q))
+    exp_lut, recip_lut = _luts_for(spec.scale_z)
+    out = ops.splitmax_decode(
+        qlib.quantize(q, s_q), k_cache_q, v_cache_q, s_q, s_k, s_v,
+        cache_len, exp_lut, recip_lut, cfg=spec.lut_config,
+        window=spec.window, block_k=spec.block_k, lut_mode=spec.lut_mode,
+        exact_recip=spec.exact_recip, impl=spec.impl)
+    return out.astype(in_dtype)

@@ -1,0 +1,141 @@
+"""Behavioral + capacity model of the CIMple CIM core.
+
+The silicon: a 32kb standard-cell SRAM CIM macro, 32 partitions, each holding
+two 512-bit dual-banked blocks.  Weights are stored nibble-split — the top
+half of the array holds the 4 MSBs, the bottom half the 4 LSBs — and an
+8b x 8b MAC is computed as two 4b MACs with the MSB partial product shifted
+left by 4 before summation, accumulating partial products over 8 cycles.
+Input bus 64b, write bus 128b.  An OAI gate per bitcell pair is both the
+multiplier and the bank selector (only one bank active per read).
+
+On TPU the MXU performs int8 x int8 -> int32 natively, so the *production*
+GEMM path is ``kernels/int8_matmul.py``.  This module provides:
+
+  * :func:`nibble_split_matmul` — a bit-exact emulation of the dual-bank
+    MSB/LSB shift-add datapath.  Tests prove it equals the direct int32 GEMM,
+    i.e. the ASIC arithmetic and the TPU arithmetic agree exactly.
+  * :class:`CIMConfig` — the capacity/geometry model (how many CIM tile loads
+    a GEMM of a given shape needs), which feeds the analytical energy model
+    in ``benchmarks/energy_model.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Bit-exact dual-bank MSB/LSB MAC emulation
+# ---------------------------------------------------------------------------
+
+def nibble_split_weights(w_q: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Split signed int8 weights into (signed MSB nibble, unsigned LSB nibble).
+
+    w = w_msb * 16 + w_lsb  with  w_msb in [-8, 7],  w_lsb in [0, 15].
+    This is exactly how the array stores them: the top sub-array keeps the
+    arithmetic high nibble, the bottom one the raw low nibble.
+    """
+    w = w_q.astype(jnp.int32)
+    w_msb = jnp.right_shift(w, 4)              # arithmetic shift keeps sign
+    w_lsb = jnp.bitwise_and(w, 0xF)            # unsigned low nibble
+    return w_msb, w_lsb
+
+
+def nibble_split_matmul(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """int8 GEMM through the CIM's dual 4b banks: (x@w_msb) << 4 + x@w_lsb.
+
+    Bit-exact equal to ``x_q.astype(int32) @ w_q.astype(int32)`` — the test
+    suite asserts this for random tensors, which validates that the paper's
+    MSB/LSB decomposition computes true 8-bit MACs.
+    """
+    x = x_q.astype(jnp.int32)
+    w_msb, w_lsb = nibble_split_weights(w_q)
+    acc_msb = x @ w_msb
+    acc_lsb = x @ w_lsb
+    return jnp.left_shift(acc_msb, 4) + acc_lsb
+
+
+def serial_bit_matmul(x_q: jax.Array, w_q: jax.Array) -> jax.Array:
+    """The full 8-cycle bit-serial accumulation (input bits fed serially).
+
+    Cycle b contributes ``bit_b(x) @ w << b`` (with the sign bit subtracting).
+    Models the CIM's "accumulates partial products over 8 cycles" behaviour;
+    bit-exact equal to the direct GEMM.
+    """
+    x = x_q.astype(jnp.int32)
+    w = w_q.astype(jnp.int32)
+    acc = jnp.zeros(x.shape[:-1] + (w.shape[-1],), jnp.int32)
+    for b in range(8):
+        bit = jnp.bitwise_and(jnp.right_shift(x, b), 1)
+        contrib = jnp.left_shift(bit @ w, b)
+        # bit 7 is the sign bit of two's complement: weight -2^7
+        acc = acc - contrib if b == 7 else acc + contrib
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# Capacity / geometry model (feeds the energy & area benchmarks)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CIMConfig:
+    """Geometry of the CIMple macro as implemented in the paper (28nm FD-SOI)."""
+    sram_kbits: int = 32            # CIM array size
+    partitions: int = 32            # CIM core partitions
+    block_bits: int = 512           # per-SRAM-block capacity (x2 banks)
+    input_bus_bits: int = 64
+    write_bus_bits: int = 128
+    weight_bits: int = 8
+    act_bits: int = 8
+    acc_bits: int = 32
+    global_buffer_kbits: int = 16 * 8   # 16 kB global SRAM buffer
+    freq_mhz: float = 417.0             # 0.85 V operating point
+    mac_cycles: int = 8                 # 8-cycle bit-serial accumulation
+
+    @property
+    def weights_resident(self) -> int:
+        """int8 weights resident in the array at once."""
+        return self.sram_kbits * 1024 // self.weight_bits
+
+    @property
+    def macs_per_cycle(self) -> int:
+        """Peak parallel 1b-partial MACs per cycle across partitions.
+
+        Each partition holds 2 x 512b blocks = 128 int8 weights; one bank of
+        64 weights is active per read (dual-bank exclusivity via the OAI).
+        """
+        return self.partitions * (self.block_bits // self.weight_bits)
+
+    @property
+    def peak_ops_per_cycle(self) -> int:
+        """1 op = 1 multiply or 1 add (paper's counting), full 8b MACs."""
+        # one 8b MAC = 2 ops, completed every mac_cycles cycles per lane
+        return 2 * self.macs_per_cycle // self.mac_cycles
+
+    @property
+    def peak_tops(self) -> float:
+        return self.peak_ops_per_cycle * self.freq_mhz * 1e6 / 1e12
+
+    def gemm_tiles(self, m: int, k: int, n: int) -> int:
+        """Number of weight-tile loads for an (m,k)x(k,n) GEMM.
+
+        The array holds ``weights_resident`` int8 weights; a (k x n) weight
+        panel is processed in ceil(k*n / resident) loads, each streamed over
+        the m activations.
+        """
+        return math.ceil(k * n / self.weights_resident)
+
+    def gemm_cycles(self, m: int, k: int, n: int,
+                    act_sparsity: float = 0.0) -> float:
+        """Cycle estimate for a GEMM at a given activation sparsity.
+
+        Sparsity reduces computed MACs ("efficiency gain is limited to the
+        reduced number of computations" — no bit-skipping hardware), modelled
+        as fewer effective input feeds.
+        """
+        macs = m * k * n * (1.0 - act_sparsity)
+        return macs * self.mac_cycles / self.macs_per_cycle

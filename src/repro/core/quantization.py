@@ -1,0 +1,220 @@
+"""Symmetric int8 quantization — the numeric substrate of CIMple.
+
+CIMple keeps *all* inter-stage traffic 8-bit: weights and activations enter the
+CIM core as int8, MAC accumulation is int32, and a 32b->8b quantization unit
+requantizes accumulator outputs before they reach the softmax LUT or the next
+GEMM.  This module implements that datapath bit-faithfully:
+
+  * symmetric per-tensor / per-axis int8 quantization with absmax calibration,
+  * int32 -> int8 requantization via fixed-point multiplier + right shift
+    (gemmlowp-style, round-half-away-from-zero — what a hardware requant unit
+    does),
+  * a straight-through-estimator (STE) fake-quant for QAT-style training, so
+    the same numerics are differentiable in ``train_step``.
+
+Everything is pure jnp and jit-safe.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN = -128
+INT8_MAX = 127
+
+
+# ---------------------------------------------------------------------------
+# Calibration + quantize / dequantize
+# ---------------------------------------------------------------------------
+
+def absmax_scale(x: jax.Array, axis=None, eps: float = 1e-8) -> jax.Array:
+    """Symmetric scale s such that round(x/s) covers [-127, 127].
+
+    ``axis=None`` -> per-tensor scalar scale; otherwise the reduction axes are
+    collapsed (per-row / per-channel quantization).
+    """
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=axis is not None)
+    amax = jnp.maximum(amax.astype(jnp.float32), eps)
+    return amax / float(INT8_MAX)
+
+
+def quantize(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """float -> int8 with round-to-nearest-even and saturation."""
+    q = jnp.round(x.astype(jnp.float32) / scale)
+    return jnp.clip(q, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedTensor:
+    """int8 payload + float32 scale, as a single pytree leaf pair."""
+
+    q: jax.Array          # int8
+    scale: jax.Array      # float32, scalar or broadcastable
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+    def dequantize(self) -> jax.Array:
+        return dequantize(self.q, self.scale)
+
+    @classmethod
+    def from_float(cls, x: jax.Array, axis=None) -> "QuantizedTensor":
+        s = absmax_scale(x, axis=axis)
+        return cls(q=quantize(x, s), scale=s)
+
+    # pytree protocol -------------------------------------------------------
+    def tree_flatten(self):
+        return (self.q, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+# ---------------------------------------------------------------------------
+# Hardware-style int32 -> int8 requantization
+# ---------------------------------------------------------------------------
+
+def requant_params_q15(real_multiplier: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Decompose a real multiplier in (0, 1) as m_q15 * 2^-shift.
+
+    ``m_q15`` is a 15-bit unsigned fixed-point multiplier in [2^14, 2^15) and
+    ``shift`` the total arithmetic right shift.  A 16-bit multiplier stage is
+    what a compact hardware requant unit (as in CIMple's 32b->8b quantization
+    block) typically implements; all intermediates below fit int32.
+    """
+    real_multiplier = jnp.asarray(real_multiplier, jnp.float32)
+    frac, e = jnp.frexp(real_multiplier)           # real = frac * 2^e, frac in [0.5, 1)
+    q15 = jnp.round(frac * (1 << 15))
+    overflow = q15 >= (1 << 15)                    # frac rounded up to 1.0
+    q15 = jnp.where(overflow, q15 / 2, q15)
+    e = jnp.where(overflow, e + 1, e)
+    shift = 15 - e                                 # y = (x * q15) >> shift
+    return q15.astype(jnp.int32), shift.astype(jnp.int32)
+
+
+def rounding_rshift(x: jax.Array, shift: jax.Array) -> jax.Array:
+    """Arithmetic right shift with round-half-up (hardware requant rounding)."""
+    x = x.astype(jnp.int32)
+    shift = jnp.asarray(shift, jnp.int32)
+    bias = jnp.where(shift > 0, jnp.left_shift(jnp.int32(1),
+                                               jnp.maximum(shift - 1, 0)), 0)
+    return jnp.right_shift(x + bias, shift)
+
+
+def requantize_int32(acc: jax.Array, real_multiplier: jax.Array,
+                     zero_point: int = 0) -> jax.Array:
+    """int32 accumulator -> int8, as the CIMple 32b->8b quantization unit.
+
+    out = clip(round(acc * real_multiplier) + zp).  This float path is exact
+    for |acc * multiplier| < 2^24 (always true: the result saturates to int8)
+    and fuses well in XLA; ``requantize_int32_bitexact`` is the pure-integer
+    datapath used for hardware-parity tests.
+    """
+    y = jnp.round(acc.astype(jnp.float32) * real_multiplier) + zero_point
+    return jnp.clip(y, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+def requantize_int32_bitexact(acc: jax.Array, real_multiplier: jax.Array,
+                              zero_point: int = 0) -> jax.Array:
+    """Pure-integer Q15 requantization pipeline (deterministic, int32-only).
+
+    Stage 1 pre-shifts the accumulator so the 16b x 15b product fits int32;
+    stage 2 multiplies by the Q15 mantissa; stage 3 round-shifts down.  Agrees
+    with :func:`requantize_int32` within <=1 LSB (the pre-shift drops low
+    bits exactly like a narrow hardware multiplier would).
+    """
+    acc = acc.astype(jnp.int32)
+    m_q15, shift = requant_params_q15(real_multiplier)
+    # Pre-shift so |acc_s| < 2^15: the useful dynamic range is bounded because
+    # the final result saturates to int8 anyway.
+    pre = jnp.maximum(shift - 15, 0)
+    post = shift - pre
+    acc_s = rounding_rshift(acc, pre)
+    acc_s = jnp.clip(acc_s, -(1 << 15), (1 << 15) - 1)  # saturate like HW
+    y = rounding_rshift(acc_s * m_q15, post)
+    return jnp.clip(y + zero_point, INT8_MIN, INT8_MAX).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# Fake-quant (QAT) with straight-through estimator
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def fake_quant(x: jax.Array, scale: jax.Array) -> jax.Array:
+    """Quantize-dequantize to the int8 grid; gradient passes straight through
+    inside the clip range and is zeroed outside (standard STE)."""
+    q = jnp.clip(jnp.round(x / scale), INT8_MIN, INT8_MAX)
+    return q * scale
+
+
+def _fq_fwd(x, scale):
+    return fake_quant(x, scale), (x, scale)
+
+
+def _fq_bwd(res, g):
+    x, scale = res
+    inside = (x >= INT8_MIN * scale) & (x <= INT8_MAX * scale)
+    return (jnp.where(inside, g, 0.0), None)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def fake_quant_calibrated(x: jax.Array, axis=None) -> jax.Array:
+    """absmax-calibrated STE fake quant (scale treated as a constant)."""
+    s = jax.lax.stop_gradient(absmax_scale(x, axis=axis))
+    return fake_quant(x, s)
+
+
+# ---------------------------------------------------------------------------
+# Serve-time weight quantization (CIMple stores weights int8 in the array)
+# ---------------------------------------------------------------------------
+
+def quantize_weights_for_serving(params):
+    """Pytree transform: every linear weight ``{"w": arr}`` and embedding
+    ``{"table": arr}`` becomes int8 payload + per-tensor scale
+    (``w_q``/``w_s``, ``table_q``/``table_s``).  Norms/scalars stay float.
+
+    Pure jnp — works under ``jax.eval_shape`` so the dry-run can lower serve
+    steps against int8 parameter specs without materializing anything.
+    Layers dequantize at use (`models/layers.linear_apply`); on TPU the int8
+    GEMM kernel consumes the payload directly.
+    """
+    def transform(node):
+        if isinstance(node, (list, tuple)):
+            return type(node)(transform(v) for v in node)
+        if not isinstance(node, dict):
+            return node
+        out = {}
+        for key, val in node.items():
+            if isinstance(val, (dict, list, tuple)):
+                out[key] = transform(val)
+            elif key in ("w", "table") and hasattr(val, "ndim") \
+                    and val.ndim >= 2:
+                # reduce over the two matmul dims only: stacked (scanned)
+                # layer weights keep per-layer scales with matching leading
+                # dims, so lax.scan can slice payload and scale together
+                ax = (val.ndim - 2, val.ndim - 1)
+                sc = absmax_scale(val, axis=ax)
+                out[key + "_q"] = quantize(val, sc)
+                out[key + "_s"] = jnp.asarray(sc, jnp.float32)
+            else:
+                out[key] = val
+        return out
+
+    return transform(params)

@@ -1,0 +1,169 @@
+"""CIMple's LUT-based split softmax — reference semantics.
+
+Safe softmax reads its input three times (max, sum, divide).  CIMple deletes
+the max pass by exploiting the int8 domain: scores are already quantized, so
+``z_quant_max = 127`` upper-bounds every score and ``e^(z_q - 127) <= 1`` is
+overflow-safe by construction.  The numerator LUT read ``E[z_q]`` can then be
+multiplied with V and *accumulated immediately* (split numerator), while the
+denominator ``S = sum E[z_q]`` accumulates in parallel; one reciprocal-LUT
+multiply at the end replaces the division.  One read of the scores, zero
+stalls, no floating point anywhere in the hardware datapath.
+
+This module gives the *semantic* (layer-level) implementations used by the
+model stack and the accuracy benchmarks:
+
+  * :func:`safe_softmax`             — float 3-pass baseline (paper's baseline)
+  * :func:`lut_split_softmax_probs`  — LUT path returning float probabilities
+  * :func:`split_softmax_attention`  — full int8 attention epilogue
+                                       (scores -> LUT -> .V -> recip -> requant)
+  * :func:`fakequant_split_softmax`  — differentiable (STE) variant for QAT
+                                       training with the same numerics
+
+The tiled/blocked equivalents used by the Pallas kernels live in
+``repro.kernels.ref`` and are tested bit-for-bit against these.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut as lut_lib
+from repro.core import quantization as qlib
+from repro.core.lut import LUTConfig, Z_QUANT_MAX
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+def safe_softmax(z: jax.Array, mask: Optional[jax.Array] = None,
+                 axis: int = -1) -> jax.Array:
+    """Three-pass safe softmax (max -> exp-sum -> divide), float32."""
+    z = z.astype(jnp.float32)
+    if mask is not None:
+        z = jnp.where(mask, z, -jnp.inf)
+    zmax = jnp.max(z, axis=axis, keepdims=True)
+    # fully-masked rows: zmax = -inf -> make exp well-defined (all zeros)
+    zmax = jnp.where(jnp.isfinite(zmax), zmax, 0.0)
+    e = jnp.exp(z - zmax)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    return e / jnp.maximum(s, 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# LUT split softmax — probabilities (for accuracy evaluation)
+# ---------------------------------------------------------------------------
+
+def lut_split_softmax_probs(z: jax.Array, cfg: LUTConfig,
+                            exp_lut: jax.Array, recip_lut: jax.Array,
+                            mask: Optional[jax.Array] = None,
+                            axis: int = -1,
+                            exact_recip: bool = False) -> jax.Array:
+    """softmax(z) computed exactly as the hardware would.
+
+    ``z`` is float scores; they are quantized to int8 with ``cfg.scale_z``
+    (this is the 32b->8b quantization unit), exponentials come from the exp
+    LUT, the division from the reciprocal LUT.  Returns float32 probabilities
+    (the dequantized view of what the datapath produces).
+
+    ``exact_recip=True`` replaces the reciprocal LUT with an exact division —
+    the ablation that isolates recip-LUT error from exp-LUT/quant error.
+    """
+    z_q = qlib.quantize(z, jnp.float32(cfg.scale_z))
+    e = lut_lib.exp_lookup(z_q, exp_lut)              # int32 in [0, 2^f_e]
+    if mask is not None:
+        e = jnp.where(mask, e, 0)                     # masked lanes never accumulate
+    # Denominator in int64-free arithmetic: float32 is exact for the sums we
+    # hit in tests; the kernels use tiled int32 (see kernels/ref.py).
+    s = jnp.sum(e.astype(jnp.float32), axis=axis, keepdims=True)
+    if exact_recip:
+        return e.astype(jnp.float32) / jnp.maximum(s, 1.0)
+    r, exp2 = lut_lib.recip_lookup(jnp.maximum(s, 1.0).astype(jnp.int32),
+                                   recip_lut, cfg)
+    return lut_lib.recip_apply(e, r, exp2)
+
+
+# ---------------------------------------------------------------------------
+# Full int8 attention epilogue (scores -> out), non-tiled semantic reference
+# ---------------------------------------------------------------------------
+
+def split_softmax_attention(z: jax.Array, v_q: jax.Array, v_scale: jax.Array,
+                            cfg: LUTConfig, exp_lut: jax.Array,
+                            recip_lut: jax.Array,
+                            mask: Optional[jax.Array] = None,
+                            out_scale: Optional[jax.Array] = None,
+                            ) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """softmax(z) @ V with the split datapath.
+
+    z      : (..., n_q, n_k) float scores (pre-quantization)
+    v_q    : (..., n_k, d_v) int8 quantized V
+    v_scale: V quantization scale
+    mask   : (..., n_q, n_k) bool, True = attend
+
+    Returns ``(out_f32, out_q)`` where ``out_f32`` is the dequantized float
+    attention output and ``out_q`` its int8 requantization when ``out_scale``
+    is given (CIMple writes int8 back to the CIM / input buffer).
+
+    Split structure: ``acc_v`` (numerator . V) and ``acc_s`` (denominator)
+    accumulate *in the same pass over k*; the reciprocal multiply happens once
+    at the end.  The e^{-127 s_z} factors cancel between numerator and
+    denominator, so no exponent bookkeeping is needed — exactly the paper's
+    argument for replacing z_max with z_quant_max.
+    """
+    z_q = qlib.quantize(z, jnp.float32(cfg.scale_z))
+    e = lut_lib.exp_lookup(z_q, exp_lut)                       # int32
+    if mask is not None:
+        e = jnp.where(mask, e, 0)
+    e_f = e.astype(jnp.float32)
+    acc_v = e_f @ v_q.astype(jnp.float32)                      # numerator . V
+    acc_s = jnp.sum(e_f, axis=-1, keepdims=True)               # denominator
+    r, exp2 = lut_lib.recip_lookup(jnp.maximum(acc_s, 1.0).astype(jnp.int32),
+                                   recip_lut, cfg)
+    out = lut_lib.recip_apply(acc_v, r, exp2) * v_scale        # dequantized
+    out_q = None
+    if out_scale is not None:
+        out_q = qlib.quantize(out, out_scale)
+    return out, out_q
+
+
+# ---------------------------------------------------------------------------
+# Differentiable (QAT / training) variant
+# ---------------------------------------------------------------------------
+
+def fakequant_split_softmax(z: jax.Array, cfg: LUTConfig,
+                            mask: Optional[jax.Array] = None,
+                            axis: int = -1) -> jax.Array:
+    """Training-time split softmax: same forward numerics as the int8 LUT
+    path (score quantization to the int8 grid + z_quant_max shift), but
+    differentiable via the straight-through estimator and an exact division.
+
+    softmax is shift-invariant, so replacing the row max with the static
+    ``z_quant_max`` ceiling is *exact* here; the trainable-visible effect is
+    the score quantization — which is precisely what the deployed datapath
+    applies.  This lets ``train_step`` train models that will be served by
+    the int8 LUT kernels without a quantization cliff.
+    """
+    s_z = jnp.float32(cfg.scale_z)
+    z_fq = qlib.fake_quant(z.astype(jnp.float32), s_z)  # snaps to int8 grid
+    zdot = z_fq - Z_QUANT_MAX * s_z                     # z - z_quant_max <= 0
+    e = jnp.exp(zdot)
+    # LUT representability floor: entries round to 0 when
+    # exp(zdot) * 2^f_e < 0.5 — training must see the same dead-zone the
+    # fixed-point table has, or QAT/deployment numerics diverge on rows far
+    # below the quantization ceiling.
+    floor = jnp.float32(-(cfg.exp_frac_bits + 1) * jnp.log(2.0))
+    e = jnp.where(zdot < floor, 0.0, e)
+    if mask is not None:
+        e = jnp.where(mask, e, 0.0)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    return e / jnp.maximum(s, 1e-30)
+
+
+# ---------------------------------------------------------------------------
+# Convenience: build the LUT pair for a config
+# ---------------------------------------------------------------------------
+
+def make_luts(cfg: LUTConfig) -> Tuple[jax.Array, jax.Array]:
+    return lut_lib.build_exp_lut(cfg), lut_lib.build_recip_lut(cfg)

@@ -1,0 +1,89 @@
+"""Deterministic, stateless-seeded synthetic LM data pipeline.
+
+Production properties this pipeline is built around:
+
+  * **step -> batch bijection**: ``batch_for_step(step)`` is a pure function
+    of ``(seed, step)``.  Restarting from a checkpoint at step N reproduces
+    the exact token stream — no iterator state to persist, no skew after an
+    elastic resize (each host computes only its shard).
+  * **host sharding**: ``host_slice`` carves the global batch by
+    (host_index, host_count) so every host materializes 1/host_count of the
+    batch — the per-host arrays are what ``jax.make_array_from_process_data``
+    would assemble on a real multi-host fleet.
+  * **structured synthetic text**: a tiny hidden Markov generator (per-batch
+    transition matrices over a small latent alphabet) rather than uniform
+    noise, so models *can* learn (loss decreases) and accuracy benchmarks
+    have signal.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_latent: int = 16            # HMM latent states
+    frames: bool = False          # also emit audio-frame embeddings (encdec)
+    d_model: int = 0              # frame dim when frames=True
+
+
+def _keys(cfg: DataConfig, step: int):
+    base = jax.random.PRNGKey(cfg.seed)
+    return jax.random.fold_in(base, step)
+
+
+def batch_for_step(cfg: DataConfig, step: int,
+                   host_index: int = 0, host_count: int = 1) -> Dict:
+    """Pure (seed, step) -> batch.  Slices this host's rows only."""
+    assert cfg.global_batch % host_count == 0
+    per_host = cfg.global_batch // host_count
+    key = _keys(cfg, step)
+    key = jax.random.fold_in(key, host_index)
+
+    k_trans, k_init, k_walk, k_emit, k_frames = jax.random.split(key, 5)
+    nl = cfg.n_latent
+    # per-step latent Markov chain (shared across the host's rows)
+    trans_logits = jax.random.normal(k_trans, (nl, nl)) * 2.0
+    trans = jax.nn.softmax(trans_logits, axis=-1)
+    state0 = jax.random.categorical(k_init, jnp.zeros((nl,)),
+                                    shape=(per_host,))
+
+    def walk(state, k):
+        nxt = jax.random.categorical(k, jnp.log(trans[state] + 1e-9))
+        return nxt, nxt
+
+    walk_keys = jax.random.split(k_walk, cfg.seq_len)
+    _, states = jax.lax.scan(lambda s, k: jax.vmap(walk)(s, jax.random.split(
+        k, per_host)), state0, walk_keys)
+    states = states.T                                     # (B, S)
+    # emit tokens: each latent state owns a band of the vocabulary
+    band = max(cfg.vocab_size // nl, 1)
+    noise = jax.random.randint(k_emit, states.shape, 0, band)
+    tokens = jnp.minimum(states * band + noise, cfg.vocab_size - 1)
+    tokens = tokens.astype(jnp.int32)
+
+    batch = {"tokens": tokens[:, :-1] if False else tokens,
+             "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.frames:
+        batch["frames"] = jax.random.normal(
+            k_frames, (per_host, cfg.seq_len, cfg.d_model),
+            jnp.float32) * 0.02
+    return batch
+
+
+def token_stream(cfg: DataConfig, start_step: int = 0,
+                 host_index: int = 0, host_count: int = 1):
+    """Infinite generator of (step, batch)."""
+    step = start_step
+    while True:
+        yield step, batch_for_step(cfg, step, host_index, host_count)
+        step += 1

@@ -1,0 +1,143 @@
+"""Dispatch wrappers: one public op per kernel, with automatic backend choice.
+
+``impl`` semantics:
+  * ``"auto"``      — Pallas on TPU, blocked-scan XLA elsewhere (same math,
+                      so CPU dry-runs and TPU production share numerics).
+  * ``"pallas"``    — force the compiled Pallas kernel (TPU).
+  * ``"xla"``       — blocked (lax.scan) pure-XLA path: production numerics
+                      with O(Sq * block_k) score memory; what the multi-pod
+                      dry-run lowers.
+  * ``"interpret"`` — Pallas kernel body executed by the interpreter (CPU
+                      correctness testing of the *kernel code itself*).
+  * ``"ref"``       — force the materializing pure-jnp oracle (tests only).
+
+All ops take/return the layouts documented in ``kernels/ref.py``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut as lut_lib
+from repro.core.lut import LUTConfig
+from repro.kernels import blocked as blocked_lib
+from repro.kernels import ref as ref_lib
+from repro.kernels.int8_matmul import int8_matmul_pallas
+from repro.kernels.splitmax_attn import splitmax_attention_pallas
+from repro.kernels.splitmax_decode import splitmax_decode_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "xla"
+    return impl
+
+
+# ---------------------------------------------------------------------------
+# split-softmax attention (prefill / encoder / training forward)
+# ---------------------------------------------------------------------------
+
+def splitmax_attention(
+    q_q: jax.Array, k_q: jax.Array, v_q: jax.Array,
+    s_q: jax.Array, s_k: jax.Array, s_v: jax.Array,
+    exp_lut: jax.Array, recip_lut: jax.Array,
+    *,
+    cfg: LUTConfig,
+    causal: bool = True,
+    window: Optional[int] = None,
+    kv_valid_len: Optional[jax.Array] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    lut_mode: str = "onehot",
+    exact_recip: bool = False,
+    impl: str = "auto",
+) -> jax.Array:
+    """(B,Hq,Sq,D) int8 x (B,Hkv,Sk,D) int8 -> (B,Hq,Sq,D) f32."""
+    impl = _resolve(impl)
+    d = q_q.shape[-1]
+    sk = k_q.shape[2]
+    if kv_valid_len is None:
+        kv_valid_len = jnp.int32(sk)
+    if impl == "ref":
+        mask = (jnp.arange(sk) < kv_valid_len)[None, None, None, :]
+        return ref_lib.splitmax_attention_ref(
+            q_q, k_q, v_q, s_q, s_k, s_v, cfg, exp_lut, recip_lut,
+            causal=causal, window=window, block_k=min(block_k, sk),
+            exact_recip=exact_recip, mask=mask)
+    if impl == "xla":
+        return blocked_lib.blocked_splitmax_attention(
+            q_q, k_q, v_q, s_q, s_k, s_v, cfg, exp_lut, recip_lut,
+            causal=causal, window=window, kv_valid_len=kv_valid_len,
+            block_k=max(block_k, 512), exact_recip=exact_recip)
+    m_z = (s_q * s_k / (jnp.sqrt(jnp.float32(d)) * cfg.scale_z)
+           ).astype(jnp.float32)
+    return splitmax_attention_pallas(
+        q_q, k_q, v_q, m_z, s_v, kv_valid_len, exp_lut, recip_lut,
+        cfg=cfg, causal=causal, window=window, block_q=block_q,
+        block_k=block_k, lut_mode=lut_mode, exact_recip=exact_recip,
+        interpret=(impl == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# split-softmax decode (one token vs int8 KV cache)
+# ---------------------------------------------------------------------------
+
+def splitmax_decode(
+    q_q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+    s_q: jax.Array, s_k: jax.Array, s_v: jax.Array,
+    cache_len: jax.Array,
+    exp_lut: jax.Array, recip_lut: jax.Array,
+    *,
+    cfg: LUTConfig,
+    window: Optional[int] = None,
+    block_k: int = 128,
+    lut_mode: str = "onehot",
+    exact_recip: bool = False,
+    impl: str = "auto",
+) -> jax.Array:
+    """(B,Hq,D) int8 x (B,Hkv,S,D) int8 cache -> (B,Hq,D) f32."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return ref_lib.splitmax_decode_ref(
+            q_q, k_cache, v_cache, s_q, s_k, s_v, cache_len, cfg,
+            exp_lut, recip_lut, window=window, exact_recip=exact_recip)
+    if impl == "xla":
+        return blocked_lib.grouped_splitmax_decode(
+            q_q, k_cache, v_cache, s_q, s_k, s_v, cache_len, cfg,
+            exp_lut, recip_lut, window=window, exact_recip=exact_recip)
+    d = q_q.shape[-1]
+    m_z = (s_q * s_k / (jnp.sqrt(jnp.float32(d)) * cfg.scale_z)
+           ).astype(jnp.float32)
+    return splitmax_decode_pallas(
+        q_q, k_cache, v_cache, m_z, s_v, cache_len, exp_lut, recip_lut,
+        cfg=cfg, window=window, block_k=block_k, lut_mode=lut_mode,
+        exact_recip=exact_recip, interpret=(impl == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# int8 GEMM
+# ---------------------------------------------------------------------------
+
+def int8_matmul(x_q: jax.Array, w_q: jax.Array,
+                multiplier: Optional[jax.Array] = None,
+                *, block_m: int = 256, block_n: int = 256, block_k: int = 256,
+                impl: str = "auto") -> jax.Array:
+    """(M,K) int8 @ (K,N) int8 -> int32 (or int8 with fused requant)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        if multiplier is None:
+            return ref_lib.int8_matmul_ref(x_q, w_q)
+        return ref_lib.int8_matmul_requant_ref(x_q, w_q, multiplier)
+    m, k = x_q.shape
+    _, n = w_q.shape
+    bm, bn, bk = (min(block_m, m), min(block_n, n), min(block_k, k))
+    return int8_matmul_pallas(
+        x_q, w_q, multiplier, block_m=bm, block_n=bn, block_k=bk,
+        interpret=(impl == "interpret"))

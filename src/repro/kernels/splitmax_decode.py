@@ -1,0 +1,193 @@
+"""Pallas TPU kernel: split-softmax *decode* (paper Eq. 3 streaming).
+
+Decoder-only mapping in CIMple: the attention output for the new token n is
+
+    softmax(Q_n K^T) V  =  ( sum_i E[z_i] V_i ) * RecipLUT( sum_i E[z_i] )
+
+streamed over the cached K_i/V_i one block at a time — the split softmax means
+each E[z_i].V_i partial product accumulates the moment z_i exists, which is
+exactly how the silicon pipelines the decoder flow (green path, Fig. 1).
+
+The GQA group of query heads sharing one KV head forms the sublane dimension
+of the q tile, so one kernel instance serves a (batch, kv-head) pair:
+
+  grid = (B * Hkv, S_max / block_k)
+  q    : (1, G_pad, D) int8      (G query heads, padded to >= 8 sublanes)
+  k/v  : (1, block_k, D) int8    (the int8 KV cache — CIMple stores K,V in
+                                  the CIM array in int8)
+  out  : (1, G_pad, D) f32
+
+Per-batch valid cache lengths arrive via scalar prefetch (SMEM), giving the
+ragged masking a real serving system needs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.lut import LUTConfig
+from repro.kernels.splitmax_attn import (_onehot_lookup, _recip_lut_inline,
+                                         _replicate_table)
+
+
+def _decode_kernel(
+    # scalar prefetch
+    lens_ref,               # SMEM (B,) int32 — valid cache length per batch
+    scalars_ref,            # SMEM (4,) f32 — [m_z, s_v, window, unused]
+    # inputs
+    q_ref,                  # (1, G_pad, D) int8
+    k_ref,                  # (1, block_k, D) int8
+    v_ref,                  # (1, block_k, D) int8
+    exp_ref, recip_ref,     # (256, 128) f32
+    # output
+    out_ref,                # (1, G_pad, D) f32
+    # scratch
+    acc_ref,                # (G_pad, D) f32
+    s_ref,                  # (G_pad, 128) f32
+    *,
+    cfg: LUTConfig,
+    hkv: int,
+    block_k: int,
+    num_k_blocks: int,
+    g_pad: int,
+    windowed: bool,
+    lut_mode: str,
+    exact_recip: bool,
+):
+    bh = pl.program_id(0)
+    ki = pl.program_id(1)
+    b = bh // hkv
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    m_z = scalars_ref[0]
+    s_v = scalars_ref[1]
+    window = scalars_ref[2].astype(jnp.int32)
+    cache_len = lens_ref[b]
+    k_start = ki * block_k
+
+    live = k_start < cache_len
+    if windowed:
+        live = jnp.logical_and(live,
+                               k_start + block_k - 1 >= cache_len - window)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.int32)                      # (G, D)
+        k = k_ref[0].astype(jnp.int32)                      # (bk, D)
+        z32 = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.int32)
+        z_q = jnp.clip(jnp.round(z32.astype(jnp.float32) * m_z),
+                       -128, 127).astype(jnp.int32)
+        if lut_mode == "onehot":
+            e = _onehot_lookup(z_q + 128, exp_ref)
+        else:
+            e = jnp.round(jnp.exp((z_q - 127).astype(jnp.float32)
+                                  * cfg.scale_z) * (1 << cfg.exp_frac_bits))
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (g_pad, block_k), 1)
+        mask = cols < cache_len
+        if windowed:
+            mask &= cols > cache_len - 1 - window
+        e = jnp.where(mask, e, 0.0)
+        acc_ref[...] += jax.lax.dot_general(
+            e, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        s_ref[:, :1] += jnp.sum(e, axis=1, keepdims=True)
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        s = jnp.maximum(s_ref[:, :1], 1.0)
+        if exact_recip:
+            r = 1.0 / s
+        else:
+            r = _recip_lut_inline(s, recip_ref, cfg)
+        out_ref[0] = acc_ref[...] * r * s_v
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "window", "block_k", "lut_mode", "exact_recip",
+                     "interpret"))
+def splitmax_decode_pallas(
+    q_q: jax.Array,            # (B, Hq, D) int8 — one new token
+    k_cache: jax.Array,        # (B, Hkv, S_max, D) int8
+    v_cache: jax.Array,        # (B, Hkv, S_max, D) int8
+    m_z: jax.Array,            # scalar f32
+    s_v: jax.Array,            # scalar f32
+    cache_len: jax.Array,      # (B,) int32 — valid entries incl. current token
+    exp_lut: jax.Array,        # (256,) int32
+    recip_lut: jax.Array,      # (256,) int32
+    *,
+    cfg: LUTConfig,
+    window: Optional[int] = None,
+    block_k: int = 128,
+    lut_mode: str = "onehot",
+    exact_recip: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (B, Hq, D) float32 — attention output for the new token."""
+    b, hq, d = q_q.shape
+    _, hkv, s_max, _ = k_cache.shape
+    group = hq // hkv
+    g_pad = max(8, group)                     # sublane-align the q tile
+    assert s_max % block_k == 0, (s_max, block_k)
+    nk = s_max // block_k
+
+    # (B, Hkv, G, D) with sublane padding
+    qg = q_q.reshape(b, hkv, group, d)
+    if g_pad != group:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
+    qf = qg.reshape(b * hkv, g_pad, d)
+    kf = k_cache.reshape(b * hkv, s_max, d)
+    vf = v_cache.reshape(b * hkv, s_max, d)
+
+    scalars = jnp.stack([
+        jnp.asarray(m_z, jnp.float32),
+        jnp.asarray(s_v, jnp.float32),
+        jnp.asarray(window if window is not None else 0, jnp.float32),
+        jnp.float32(0.0),
+    ])
+
+    kernel = functools.partial(
+        _decode_kernel, cfg=cfg, hkv=hkv, block_k=block_k, num_k_blocks=nk,
+        g_pad=g_pad, windowed=window is not None, lut_mode=lut_mode,
+        exact_recip=exact_recip)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, g_pad, d), lambda bh, ki, *_: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, ki, *_: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, ki, *_: (bh, ki, 0)),
+            pl.BlockSpec((256, 128), lambda *_: (0, 0)),
+            pl.BlockSpec((256, 128), lambda *_: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g_pad, d), lambda bh, ki, *_: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g_pad, d), jnp.float32),
+            pltpu.VMEM((g_pad, 128), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g_pad, d), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), scalars, qf, kf, vf,
+      _replicate_table(exp_lut), _replicate_table(recip_lut))
+
+    out = out.reshape(b, hkv, g_pad, d)[:, :, :group, :]
+    return out.reshape(b, hq, d)

@@ -1,0 +1,36 @@
+"""Production meshes and the logical-axis binding used by the model code.
+
+``make_production_mesh`` is a *function* (never a module-level constant) so
+importing this module touches no device state — required because the dry-run
+must set ``XLA_FLAGS`` before anything initializes jax devices.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that shard the batch (all data-parallel axes)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def logical_rules(mesh: Mesh) -> Dict[str, object]:
+    """Logical activation axis -> mesh axis binding (see dist/sharding.py)."""
+    return {
+        "batch": batch_axes(mesh),
+        "heads": "model",
+        "mlp": "model",
+        "vocab": "model",
+        "expert": "model",
+        "embed": None,       # residual stream feature dim replicated
+        "seq": "model",      # sequence parallelism (cfg.seq_sharding)
+    }

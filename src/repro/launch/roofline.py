@@ -1,0 +1,156 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+TPU v5e constants (per chip): 197 TFLOP/s bf16 (394 TOP/s int8), 819 GB/s
+HBM, ~50 GB/s/link ICI.  The three terms (seconds, per step):
+
+    compute    = HLO_FLOPs / peak_FLOPs            (per-chip HLO module)
+    memory     = HLO_bytes / HBM_bw
+    collective = collective_bytes / link_bw
+
+``cost_analysis`` is already per-device (the compiled module is the SPMD
+per-device program).  Collective bytes are not in cost_analysis: we parse the
+optimized HLO and sum the *result buffer sizes* of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute (a uniform
+wire-bytes proxy; ring factors ~2(n-1)/n are absorbed into the convention and
+applied identically across iterations, so deltas are meaningful).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # B/s per chip
+LINK_BW = 50e9                    # B/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[256,4096,128]{2,1,0}   or  f32[]
+_SHAPE_RE = re.compile(r"(\w+?)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-buffer bytes per collective kind from optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # defining ops look like:  %name = TYPE[dims]{layout} opcode(...)
+        m = re.match(r"%?\S+\s*=\s*(\(?[^)=]*?\)?)\s+([\w-]+)", stripped)
+        if not m:
+            continue
+        shape_str, opcode = m.group(1), m.group(2)
+        # normalize fused variants like all-gather-start / all-reduce-done
+        for kind in _COLLECTIVES:
+            if opcode == kind or opcode.startswith(kind + "-start"):
+                out[kind] += _shape_bytes(shape_str)
+                break
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                  # per-chip HLO flops
+    hbm_bytes: float              # per-chip bytes accessed
+    coll_bytes: float             # per-chip collective bytes (result sizes)
+    coll_breakdown: Dict[str, int]
+    model_flops: float            # 6*N*D (global, all chips)
+    chips: int
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO flops summed over chips)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step-time estimate: max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def mfu(self) -> float:
+        """Model-flops utilization at the roofline estimate."""
+        denom = self.step_time * self.chips * PEAK_FLOPS_BF16
+        return self.model_flops / denom if denom else 0.0
+
+    def summary(self) -> Dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "hlo_flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "coll_bytes_per_chip": self.coll_bytes,
+            "coll_breakdown": self.coll_breakdown,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_step_s": self.step_time,
+            "roofline_mfu": self.mfu,
+        }
+
+
+def model_flops_for(cfg, kind: str, seq: int, batch: int) -> float:
+    """6*N*D (train) / 2*N*D (forward-only) with N = active params."""
+    n = cfg.active_param_count() if cfg.family == "moe" else cfg.param_count()
+    if kind == "train":
+        tokens = seq * batch
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = seq * batch
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * batch
+
+
+def analyze(compiled, hlo_text: str, cfg, kind: str, seq: int, batch: int,
+            chips: int) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    return RooflineTerms(
+        flops=flops, hbm_bytes=hbm,
+        coll_bytes=float(sum(coll.values())), coll_breakdown=coll,
+        model_flops=model_flops_for(cfg, kind, seq, batch), chips=chips)

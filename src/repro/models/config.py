@@ -1,0 +1,114 @@
+"""Unified architecture configuration covering all assigned families."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.attention import AttentionSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int            # routed experts
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0         # always-on shared experts (deepseek-moe)
+    capacity_factor: float = 1.25
+    first_dense_layers: int = 0   # leading layers that stay dense
+    router_z_loss: float = 1e-3
+    aux_loss: float = 1e-2
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    kind: str                 # "mamba1" | "mamba2"
+    d_state: int
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64         # mamba2 only
+    chunk: int = 128          # scan chunk length
+    dt_rank: Optional[int] = None   # mamba1; default d_model/16
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str               # dense | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    norm: str = "rmsnorm"     # rmsnorm | layernorm | nonparam_ln
+    act: str = "silu"         # silu | gelu
+    qk_norm: bool = False     # chameleon-style per-head q/k RMSNorm
+    rope_theta: float = 1e4
+    max_seq: int = 4096
+    tie_embeddings: bool = True
+    dtype: str = "float32"    # compute dtype ("bfloat16" for production)
+    vocab_pad_multiple: int = 256
+    # attention datapath (the paper's technique).  scale_z is the score
+    # quantization scale (calibrated: clip ~ +-8 covers post-1/sqrt(d)
+    # attention logits while keeping every row above the 2^-15 exp-LUT
+    # representability floor; see DESIGN.md §7)
+    attn_mode: str = "fakequant"      # float | fakequant | int8 (training)
+    serve_attn_mode: str = "int8"     # mode used by serve steps
+    scale_z: float = 8.0 / 127
+    window: Optional[int] = None      # SWA
+    attn_impl: str = "auto"
+    # perf levers (§Perf hillclimb; defaults = paper-faithful baseline)
+    attn_score_dtype: str = "float32"
+    attn_triangular: bool = False
+    logits_dtype: Optional[str] = None  # None -> float32 LM head
+    serve_param_sharding: str = "fsdp"  # fsdp | tp (serve-time; tp kills the
+                                        # per-step param all-gather)
+    serve_param_dtype: str = "float32"  # bfloat16 halves serve param memory
+    seq_sharding: bool = False          # Megatron-SP-style: residual stream
+                                        # seq-sharded over "model" between
+                                        # matmuls (per-token ops move 1/TP
+                                        # of the bytes)
+    # family extensions
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid_attn_every: int = 6        # zamba2: shared attn cadence
+    n_encoder_layers: int = 0         # encdec only
+    remat: bool = True                # checkpoint each block in training
+    scan_layers: bool = True          # lax.scan over stacked layer params
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def d_inner(self) -> int:
+        assert self.ssm is not None
+        return self.ssm.expand * self.d_model
+
+    def attn_spec(self, *, serve: bool = False) -> AttentionSpec:
+        return AttentionSpec(
+            mode=self.serve_attn_mode if serve else self.attn_mode,
+            scale_z=self.scale_z, window=self.window, causal=True,
+            impl=self.attn_impl, score_dtype=self.attn_score_dtype,
+            triangular=self.attn_triangular)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------ parameter counting (for 6ND roofline bookkeeping) --------------
+    def param_count(self) -> int:
+        """Exact trainable parameter count (excl. vocab padding)."""
+        from repro.models import transformer as tr
+        return tr.count_params(self)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: shared + top_k experts only)."""
+        from repro.models import transformer as tr
+        return tr.count_params(self, active_only=True)

@@ -1,0 +1,30 @@
+"""Modality frontend stubs (per assignment: frontends are STUBS).
+
+* chameleon-34b (early-fusion VLM): image content arrives as **VQ token ids**
+  already inside the 65536-entry vocabulary — the VQ-VAE tokenizer itself is
+  external.  ``vq_image_tokens`` deterministically synthesizes a patch-token
+  stream for tests/examples.
+
+* seamless-m4t (audio): the speech frontend (fbank + w2v-BERT) is external;
+  the encoder consumes precomputed frame embeddings (B, frames, d_model).
+  ``audio_frame_embeddings`` synthesizes them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def vq_image_tokens(key, batch: int, n_patches: int, vocab_size: int,
+                    image_token_offset: int = 8192) -> jax.Array:
+    """Deterministic stand-in for a VQ-VAE tokenizer: ids in the image range
+    [image_token_offset, vocab_size)."""
+    return jax.random.randint(key, (batch, n_patches), image_token_offset,
+                              vocab_size, dtype=jnp.int32)
+
+
+def audio_frame_embeddings(key, batch: int, frames: int, d_model: int
+                           ) -> jax.Array:
+    """Deterministic stand-in for the speech feature extractor."""
+    return jax.random.normal(key, (batch, frames, d_model),
+                             jnp.float32) * 0.02

@@ -1,0 +1,153 @@
+"""Elementary layers shared by every architecture family.
+
+Pure-functional convention: each layer is an ``init(key, ...) -> params`` /
+``apply(params, x, ...) -> y`` pair operating on plain dict pytrees.  Compute
+happens in ``cfg.dtype`` (bf16 on TPU) with float32 master parameters; norms
+and softmax statistics stay in float32.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def normal_init(key, shape, std=0.02, dtype=jnp.float32):
+    return jax.random.normal(key, shape, dtype) * std
+
+
+def linear_init(key, d_in, d_out, *, std=None, dtype=jnp.float32):
+    std = std if std is not None else d_in ** -0.5
+    return {"w": normal_init(key, (d_in, d_out), std, dtype)}
+
+
+def linear_apply(params, x, *, dtype=None):
+    if "w_q" in params:       # int8 resident serve weights (dequant-on-use)
+        w = params["w_q"].astype(dtype or jnp.float32) * params["w_s"]
+    else:
+        w = params["w"]
+    if dtype is not None:
+        w = w.astype(dtype)
+        x = x.astype(dtype)
+    return x @ w
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(key, dim):
+    del key
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm_apply(params, x, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dt)
+
+
+def layernorm_init(key, dim):
+    del key
+    return {"scale": jnp.ones((dim,), jnp.float32),
+            "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm_apply(params, x, eps=1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(dt)
+
+
+def nonparam_layernorm_apply(params, x, eps=1e-5):
+    """OLMo's non-parametric LayerNorm: normalize only, no affine."""
+    del params
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(dt)
+
+
+NORM_INIT = {"rmsnorm": rmsnorm_init, "layernorm": layernorm_init,
+             "nonparam_ln": lambda key, dim: {}}
+NORM_APPLY = {"rmsnorm": rmsnorm_apply, "layernorm": layernorm_apply,
+              "nonparam_ln": nonparam_layernorm_apply}
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def pad_vocab(vocab_size: int, multiple: int = 256) -> int:
+    """Round the vocab up so it tiles across model shards (logical vocab ids
+    above ``vocab_size`` are never produced; their logits are masked)."""
+    return ((vocab_size + multiple - 1) // multiple) * multiple
+
+
+def embedding_init(key, vocab_padded, dim, std=0.02):
+    return {"table": normal_init(key, (vocab_padded, dim), std)}
+
+
+def _embed_table(params):
+    if "table_q" in params:
+        return params["table_q"], params["table_s"]
+    return params["table"], None
+
+
+def embedding_apply(params, token_ids, *, dtype):
+    tab, sc = _embed_table(params)
+    tab = shard(tab, "vocab", "embed")
+    out = jnp.take(tab, token_ids, axis=0).astype(dtype)
+    return out * sc.astype(dtype) if sc is not None else out
+
+
+def unembed_apply(params, x, *, logical_vocab: int, dtype=jnp.float32):
+    """Tied unembedding: logits over the padded vocab; padding lanes -> -inf
+    is the caller's concern only when sampling (loss masks labels instead).
+
+    ``dtype=bfloat16`` halves the (B,S,V) logits traffic (CE statistics are
+    still accumulated in f32 by the loss) — a §Perf lever."""
+    tab, sc = _embed_table(params)
+    tab = shard(tab, "vocab", "embed")
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(dtype), tab.astype(dtype),
+                        preferred_element_type=dtype)
+    if sc is not None:
+        logits = logits * sc.astype(dtype)
+    del logical_vocab
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, H, S, D); positions: (S,) shared or (B, S) ragged."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)                        # (D/2,)
+    if positions.ndim == 1:                                   # (S,)
+        angles = positions[None, None, :, None].astype(jnp.float32) * freqs
+    else:                                                     # (B, S)
+        angles = positions[:, None, :, None].astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(angles), jnp.sin(angles)               # (B|1,1,S,D/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

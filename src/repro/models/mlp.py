@@ -1,0 +1,36 @@
+"""Feed-forward blocks: SwiGLU (llama family) and GeLU (classic)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int = None) -> Dict:
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": L.linear_init(ks[0], cfg.d_model, d_ff),
+        "w_out": L.linear_init(ks[1], d_ff, cfg.d_model,
+                               std=d_ff ** -0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+    if cfg.act == "silu":                      # SwiGLU needs the gate
+        p["w_gate"] = L.linear_init(ks[2], cfg.d_model, d_ff)
+    return p
+
+
+def mlp_apply(params, x, cfg: ModelConfig) -> jax.Array:
+    dt = cfg.compute_dtype
+    h = L.linear_apply(params["w_in"], x, dtype=dt)
+    h = shard(h, "batch", None, "mlp")
+    if cfg.act == "silu":
+        g = L.linear_apply(params["w_gate"], x, dtype=dt)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return L.linear_apply(params["w_out"], h, dtype=dt)

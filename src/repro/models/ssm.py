@@ -1,0 +1,288 @@
+"""Selective state-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+The paper's split-softmax technique is attention-specific; SSM blocks have no
+softmax, so they run the plain datapath (DESIGN.md §Arch-applicability).  The
+projections still ride the int8 CIM GEMM path when quantized serving is on.
+
+Training-time scans are *chunked*: a sequential ``lax.scan`` over chunks
+carries the recurrent state, and within a chunk the recurrence is solved in
+parallel (associative scan for Mamba-1; the matmul "state-space duality" form
+for Mamba-2 — MXU-friendly).  Decode carries ``(conv_tail, ssm_state)`` per
+layer — O(1) in sequence length, which is why the 500k-token cell is feasible
+for these architectures.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+
+def _causal_conv1d(x: jax.Array, w: jax.Array, tail: Optional[jax.Array]
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv.  x: (B, S, C); w: (K, C); tail: (B, K-1, C)
+    carried state (None = zeros, training).  Returns (y, new_tail)."""
+    k = w.shape[0]
+    b, s, c = x.shape
+    if tail is None:
+        tail = jnp.zeros((b, k - 1, c), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)          # (B, S+K-1, C)
+    y = jnp.zeros_like(x)
+    for i in range(k):                                # K taps (K=4): unrolled
+        y = y + xp[:, i:i + s, :] * w[i]
+    new_tail = xp[:, s:, :] if False else xp[:, -(k - 1):, :]
+    return y, new_tail
+
+
+def _segsum(log_a: jax.Array) -> jax.Array:
+    """Stable segment-sum: out[..., i, j] = sum_{j < t <= i} log_a[..., t]
+    (lower-triangular cumulative decays), -inf above the diagonal."""
+    t = log_a.shape[-1]
+    x = jnp.cumsum(log_a, axis=-1)
+    diff = x[..., :, None] - x[..., None, :] + log_a[..., :, None] * 0
+    # out[i,j] = cumsum[i] - cumsum[j]  for i >= j  (decay j+1..i)
+    mask = jnp.tril(jnp.ones((t, t), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba-7b)
+# ---------------------------------------------------------------------------
+
+def mamba1_init(key, cfg: ModelConfig) -> Dict:
+    sc = cfg.ssm
+    d, di, n = cfg.d_model, cfg.d_inner, sc.d_state
+    dt_rank = sc.dt_rank or max(d // 16, 1)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": L.linear_init(ks[0], d, 2 * di),
+        "conv_w": L.normal_init(ks[1], (sc.d_conv, di), di ** -0.5),
+        "x_proj": L.linear_init(ks[2], di, dt_rank + 2 * n),
+        "dt_proj": {"w": L.normal_init(ks[3], (dt_rank, di), dt_rank ** -0.5),
+                    "b": jnp.log(jnp.expm1(
+                        jnp.exp(jax.random.uniform(
+                            ks[4], (di,), minval=jnp.log(1e-3),
+                            maxval=jnp.log(1e-1))))),
+                    },
+        "A_log": jnp.log(jnp.broadcast_to(
+            jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": L.linear_init(ks[5], di, d,
+                                  std=di ** -0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def _mamba1_scan_chunked(a: jax.Array, bx: jax.Array, h0: jax.Array,
+                         chunk: int) -> Tuple[jax.Array, jax.Array]:
+    """h_t = a_t * h_{t-1} + bx_t, solved chunk-parallel.
+
+    a, bx: (B, S, D, N); h0: (B, D, N).  Returns (h_all, h_last)."""
+    b, s, d, n = a.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        # pad with identity steps (a=1, b=0): state is preserved past s
+        pad = chunk - s % chunk
+        a = jnp.concatenate([a, jnp.ones((b, pad, d, n), a.dtype)], 1)
+        bx = jnp.concatenate([bx, jnp.zeros((b, pad, d, n), bx.dtype)], 1)
+    s_pad = a.shape[1]
+    nc = s_pad // chunk
+    a_c = jnp.moveaxis(a.reshape(b, nc, chunk, d, n), 1, 0)
+    bx_c = jnp.moveaxis(bx.reshape(b, nc, chunk, d, n), 1, 0)
+
+    def assoc(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    def body(h, xs):
+        ac, bc = xs                                   # (B, chunk, D, N)
+        aa, bb = jax.lax.associative_scan(assoc, (ac, bc), axis=1)
+        h_chunk = aa * h[:, None] + bb                # (B, chunk, D, N)
+        return h_chunk[:, -1], h_chunk
+
+    h_last, h_all = jax.lax.scan(body, h0, (a_c, bx_c))
+    h_all = jnp.moveaxis(h_all, 0, 1).reshape(b, s_pad, d, n)[:, :s]
+    return h_all, h_last
+
+
+def mamba1_apply(params, x, cfg: ModelConfig, *,
+                 state: Optional[Dict] = None
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, S, d_model) -> (y, new_state).  ``state`` carries
+    {"conv": (B, K-1, di), "h": (B, di, N)} for decode; None for training."""
+    sc = cfg.ssm
+    dt = cfg.compute_dtype
+    di, n = cfg.d_inner, sc.d_state
+    dt_rank = sc.dt_rank or max(cfg.d_model // 16, 1)
+
+    xz = L.linear_apply(params["in_proj"], x, dtype=dt)
+    xs, z = jnp.split(xz, 2, axis=-1)                    # (B,S,di) each
+    xs = shard(xs, "batch", None, "mlp")
+    conv_tail = state["conv"] if state is not None else None
+    xs, new_tail = _causal_conv1d(xs, params["conv_w"].astype(dt), conv_tail)
+    xs = jax.nn.silu(xs)
+
+    proj = L.linear_apply(params["x_proj"], xs, dtype=dt).astype(jnp.float32)
+    dt_in, bmat, cmat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    delta = jax.nn.softplus(dt_in @ params["dt_proj"]["w"]
+                            + params["dt_proj"]["b"])     # (B,S,di)
+    a_mat = -jnp.exp(params["A_log"])                     # (di, N)
+    xf = xs.astype(jnp.float32)
+    # discretize: a = exp(delta*A)  (B,S,di,N); bx = delta*B*x
+    da = jnp.exp(delta[..., None] * a_mat)                # (B,S,di,N)
+    dbx = (delta * xf)[..., None] * bmat[:, :, None, :]   # (B,S,di,N)
+
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((x.shape[0], di, n), jnp.float32))
+    h_all, h_last = _mamba1_scan_chunked(da, dbx, h0, sc.chunk)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, cmat)          # (B,S,di)
+    y = y + xf * params["D"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(dt)
+    out = L.linear_apply(params["out_proj"], y, dtype=dt)
+    new_state = {"conv": new_tail, "h": h_last} if state is not None else None
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2)
+# ---------------------------------------------------------------------------
+
+def mamba2_init(key, cfg: ModelConfig) -> Dict:
+    sc = cfg.ssm
+    d, di, n, p = cfg.d_model, cfg.d_inner, sc.d_state, sc.headdim
+    nh = di // p
+    ks = jax.random.split(key, 6)
+    return {
+        # fused projection: [x (di), z (di), B (n), C (n), dt (nh)]
+        "in_proj": L.linear_init(ks[0], d, 2 * di + 2 * n + nh),
+        "conv_w": L.normal_init(ks[1], (sc.d_conv, di + 2 * n),
+                                (di + 2 * n) ** -0.5),
+        "A_log": jnp.log(jax.random.uniform(ks[2], (nh,), minval=1.0,
+                                            maxval=16.0)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+            ks[3], (nh,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1))))),
+        "norm": L.rmsnorm_init(ks[4], di),
+        "out_proj": L.linear_init(ks[5], di, d,
+                                  std=di ** -0.5 / (2 * cfg.n_layers) ** 0.5),
+    }
+
+
+def _ssd_chunked(xh: jax.Array, log_a: jax.Array, bmat: jax.Array,
+                 cmat: jax.Array, h0: jax.Array, chunk: int
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Mamba-2 SSD in matmul form, scanned over chunks.
+
+    xh   : (B, S, H, P)   head inputs (already scaled by dt)
+    log_a: (B, S, H)      per-step log decay (dt * A, <= 0)
+    bmat : (B, S, N), cmat: (B, S, N)   shared across heads (g=1)
+    h0   : (B, H, N, P)   initial state
+    Returns (y (B,S,H,P), h_last).
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        # identity padding: decay 1 (log_a = 0), zero input -> state frozen
+        pad = chunk - s % chunk
+        xh = jnp.concatenate([xh, jnp.zeros((b, pad, h, p), xh.dtype)], 1)
+        log_a = jnp.concatenate([log_a,
+                                 jnp.zeros((b, pad, h), log_a.dtype)], 1)
+        bmat = jnp.concatenate([bmat, jnp.zeros((b, pad, n), bmat.dtype)], 1)
+        cmat = jnp.concatenate([cmat, jnp.zeros((b, pad, n), cmat.dtype)], 1)
+    s_pad = xh.shape[1]
+    nc = s_pad // chunk
+    xc = jnp.moveaxis(xh.reshape(b, nc, chunk, h, p), 1, 0)
+    lc = jnp.moveaxis(log_a.reshape(b, nc, chunk, h), 1, 0)
+    bc = jnp.moveaxis(bmat.reshape(b, nc, chunk, n), 1, 0)
+    cc = jnp.moveaxis(cmat.reshape(b, nc, chunk, n), 1, 0)
+
+    def body(hprev, xs):
+        xck, lck, bck, cck = xs        # (B,chunk,H,P), (B,chunk,H), (B,chunk,N)
+        lck = lck.astype(jnp.float32)
+        # intra-chunk ("diagonal") term: attention-like matmul with decay mask
+        seg = _segsum(jnp.moveaxis(lck, -1, 1))          # (B,H,c,c)
+        decay_mat = jnp.exp(seg)                          # lower-tri
+        scores = jnp.einsum("bin,bjn->bij", cck, bck)     # (B,c,c)
+        y_diag = jnp.einsum("bij,bhij,bjhp->bihp",
+                            scores, decay_mat, xck)
+        # inter-chunk: contribution of carried state
+        decay_in = jnp.exp(jnp.cumsum(lck, axis=1))       # (B,c,H) decay 1..t
+        y_off = jnp.einsum("bin,bih,bhnp->bihp", cck, decay_in, hprev)
+        # state update: h_new = decay_total * h + sum_t decay_{t->end} B_t x_t
+        total = decay_in[:, -1]                            # (B,H)
+        decay_out = jnp.exp(jnp.cumsum(lck[:, ::-1], axis=1)[:, ::-1]
+                            - lck)                         # decay t+1..end
+        h_new = (total[:, :, None, None] * hprev
+                 + jnp.einsum("bth,btn,bthp->bhnp", decay_out, bck, xck))
+        return h_new, y_diag + y_off
+
+    h_last, y_all = jax.lax.scan(body, h0, (xc, lc, bc, cc))
+    y = jnp.moveaxis(y_all, 0, 1).reshape(b, s_pad, h, p)[:, :s]
+    return y, h_last
+
+
+def mamba2_apply(params, x, cfg: ModelConfig, *,
+                 state: Optional[Dict] = None
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Mamba-2 block.  state: {"conv": (B,K-1,di+2n), "h": (B,H,N,P)}."""
+    sc = cfg.ssm
+    dt_ = cfg.compute_dtype
+    di, n, p = cfg.d_inner, sc.d_state, sc.headdim
+    nh = di // p
+    b, s, _ = x.shape
+
+    zxbcdt = L.linear_apply(params["in_proj"], x, dtype=dt_)
+    z, xbc, dt_in = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    conv_tail = state["conv"] if state is not None else None
+    xbc, new_tail = _causal_conv1d(xbc, params["conv_w"].astype(dt_),
+                                   conv_tail)
+    xbc = jax.nn.silu(xbc)
+    xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    xs = shard(xs, "batch", None, "mlp")
+
+    delta = jax.nn.softplus(dt_in.astype(jnp.float32)
+                            + params["dt_bias"])           # (B,S,H)
+    a = -jnp.exp(params["A_log"])                          # (H,)
+    log_a = delta * a                                       # (B,S,H) <= 0
+    xh = (xs.astype(jnp.float32).reshape(b, s, nh, p)
+          * delta[..., None])                               # dt-scaled input
+    h0 = (state["h"] if state is not None
+          else jnp.zeros((b, nh, n, p), jnp.float32))
+    y, h_last = _ssd_chunked(xh, log_a, bmat.astype(jnp.float32),
+                             cmat.astype(jnp.float32), h0, sc.chunk)
+    y = y + xs.astype(jnp.float32).reshape(b, s, nh, p) * params["D"][:, None]
+    y = y.reshape(b, s, di)
+    y = L.rmsnorm_apply(params["norm"], y)
+    y = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+         ).astype(dt_)
+    out = L.linear_apply(params["out_proj"], y, dtype=dt_)
+    new_state = ({"conv": new_tail, "h": h_last}
+                 if state is not None else None)
+    return out, new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, n_layers: int) -> Dict:
+    """Stacked decode state for the SSM layers of a model."""
+    sc = cfg.ssm
+    if sc.kind == "mamba1":
+        conv_c = cfg.d_inner
+        h_shape = (n_layers, batch, cfg.d_inner, sc.d_state)
+    else:
+        conv_c = cfg.d_inner + 2 * sc.d_state
+        h_shape = (n_layers, batch, cfg.d_inner // sc.headdim, sc.d_state,
+                   sc.headdim)
+    return {
+        "conv": jnp.zeros((n_layers, batch, sc.d_conv - 1, conv_c),
+                          cfg.compute_dtype),
+        "h": jnp.zeros(h_shape, jnp.float32),
+    }

@@ -1,0 +1,105 @@
+"""AdamW + cosine schedule + global-norm clipping, built from scratch.
+
+Optimizer state lives in the same pytree structure as the params, so FSDP
+sharding rules apply to moments automatically (ZeRO-style: each chip holds
+the optimizer shard of the params it owns).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 200
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # gradient accumulation: effective batch = micro * accum
+    accum_steps: int = 1
+
+
+class OptState(NamedTuple):
+    step: jax.Array          # int32
+    mu: Any                  # first moments  (params-shaped pytree)
+    nu: Any                  # second moments
+
+
+def init_state(params) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+    return OptState(step=jnp.int32(0), mu=zeros,
+                    nu=jax.tree.map(jnp.copy, zeros))
+
+
+def lr_at(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to ``min_lr_ratio * peak``."""
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float
+                        ) -> Tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def _is_decayed(path: str) -> bool:
+    """Weight decay applies to matrices, not to norms/biases/scalars."""
+    lowered = path.lower()
+    return not any(t in lowered for t in
+                   ("norm", "bias", "scale", "a_log", "dt_bias", "d']"))
+
+
+def apply_updates(params, grads, state: OptState, cfg: OptimizerConfig
+                  ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW step (grads already averaged across data parallel)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state.step + 1
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    flat_params, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_grads = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state.mu)
+    flat_nu = jax.tree.leaves(state.nu)
+
+    new_p, new_mu, new_nu = [], [], []
+    for (path, p), g, mu, nu in zip(flat_params, flat_grads, flat_mu,
+                                    flat_nu):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        upd = (mu / bc1) / (jnp.sqrt(nu / bc2) + cfg.eps)
+        if cfg.weight_decay and _is_decayed(str(path)):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - lr * upd).astype(p.dtype))
+        new_mu.append(mu)
+        new_nu.append(nu)
+
+    params = jax.tree_util.tree_unflatten(treedef, new_p)
+    mu_t = jax.tree_util.tree_unflatten(treedef, new_mu)
+    nu_t = jax.tree_util.tree_unflatten(treedef, new_nu)
+    return params, OptState(step=step, mu=mu_t, nu=nu_t), {
+        "lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,64 @@
+"""CIM behavioral model: the ASIC's dual-bank arithmetic == TPU arithmetic."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cim
+
+
+def test_nibble_split_weights_reconstruct(rng):
+    w = rng.integers(-128, 128, (64,)).astype(np.int8)
+    msb, lsb = cim.nibble_split_weights(jnp.asarray(w))
+    recon = np.asarray(msb) * 16 + np.asarray(lsb)
+    assert np.array_equal(recon, w.astype(np.int32))
+    assert np.all(np.asarray(lsb) >= 0) and np.all(np.asarray(lsb) < 16)
+
+
+def test_nibble_split_matmul_bitexact(rng):
+    x = rng.integers(-128, 128, (32, 48)).astype(np.int8)
+    w = rng.integers(-128, 128, (48, 24)).astype(np.int8)
+    direct = x.astype(np.int32) @ w.astype(np.int32)
+    banked = np.asarray(cim.nibble_split_matmul(jnp.asarray(x),
+                                                jnp.asarray(w)))
+    assert np.array_equal(direct, banked)
+
+
+def test_serial_bit_matmul_bitexact(rng):
+    x = rng.integers(-128, 128, (16, 32)).astype(np.int8)
+    w = rng.integers(-128, 128, (32, 8)).astype(np.int8)
+    direct = x.astype(np.int32) @ w.astype(np.int32)
+    serial = np.asarray(cim.serial_bit_matmul(jnp.asarray(x),
+                                              jnp.asarray(w)))
+    assert np.array_equal(direct, serial)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=5),
+       st.integers(min_value=1, max_value=7))
+def test_nibble_matmul_property(m, k):
+    rng = np.random.default_rng(m * 31 + k)
+    x = rng.integers(-128, 128, (m, k)).astype(np.int8)
+    w = rng.integers(-128, 128, (k, 3)).astype(np.int8)
+    direct = x.astype(np.int32) @ w.astype(np.int32)
+    banked = np.asarray(cim.nibble_split_matmul(jnp.asarray(x),
+                                                jnp.asarray(w)))
+    assert np.array_equal(direct, banked)
+
+
+def test_capacity_model_paper_numbers():
+    c = cim.CIMConfig()
+    # 32kb array holds 4096 int8 weights
+    assert c.weights_resident == 4096
+    # 32 partitions x 64 active weights each
+    assert c.macs_per_cycle == 32 * 64
+    # peak TOPS at the 0.85V operating point is sub-1 (macro-level)
+    assert 0.1 < c.peak_tops < 1.0
+    # a (64, 4096) weight panel needs ceil(4096*64/4096) = 64 tile loads
+    assert c.gemm_tiles(1, 4096, 64) == 64
+
+
+def test_sparsity_reduces_cycles():
+    c = cim.CIMConfig()
+    dense = c.gemm_cycles(16, 512, 512)
+    sparse = c.gemm_cycles(16, 512, 512, act_sparsity=0.875)
+    assert abs(sparse / dense - 0.125) < 1e-9

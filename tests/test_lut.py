@@ -1,0 +1,79 @@
+"""LUT construction + reciprocal path: unit and property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lut as lut_lib
+from repro.core.lut import LUTConfig
+
+CFG = LUTConfig(scale_z=24.0 / 127)
+
+
+def test_exp_table_endpoints():
+    t = lut_lib.build_exp_lut(CFG)
+    assert t.shape == (256,)
+    # index 255 == z_quant_max -> e^0 == 1.0 exactly in fixed point
+    assert t[255] == 1 << CFG.exp_frac_bits
+    # monotone nondecreasing, nonnegative
+    assert np.all(np.diff(t) >= 0)
+    assert t[0] >= 0
+
+
+def test_exp_table_matches_double_precision():
+    t = lut_lib.build_exp_lut(CFG)
+    idx = np.arange(256)
+    exact = np.exp((idx - 255) * CFG.scale_z) * (1 << CFG.exp_frac_bits)
+    assert np.max(np.abs(t - np.round(exact))) == 0
+
+
+def test_recip_table_bounds():
+    m = lut_lib.build_recip_lut(CFG)
+    assert m.shape == (256,)
+    # entries approximate 2^15/mant for mant in (1,2): strictly decreasing
+    assert np.all(np.diff(m) < 0)
+    assert m[0] <= (1 << CFG.recip_frac_bits)
+    assert m[-1] >= (1 << CFG.recip_frac_bits) // 2
+
+
+@pytest.mark.parametrize("s", [1, 2, 3, 255, 256, 32768, 32767, 32769,
+                               176640, 176639, 1 << 23, (1 << 24) - 1])
+def test_recip_boundaries(s):
+    """Exact powers of two and bin edges — the cases where float log2/exp2
+    flip the index (the bug this suite pinned during bring-up)."""
+    m = lut_lib.build_recip_lut(CFG)
+    r, e = lut_lib.recip_lookup(jnp.int32(s), m, CFG)
+    approx = float(r) * 2.0 ** float(e)
+    rel = abs(approx * s - 1.0)
+    # mid-rise table: max relative error 2^-(mbits+1) plus rounding
+    assert rel < 2.0 ** -(CFG.recip_index_bits) , (s, approx, rel)
+
+
+def test_exp2_int_exact():
+    es = jnp.arange(-126, 128)
+    got = lut_lib.exp2_int(es)
+    want = np.exp2(np.arange(-126, 128).astype(np.float64)).astype(np.float32)
+    assert np.array_equal(np.asarray(got), want)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(min_value=1, max_value=(1 << 24) - 1))
+def test_recip_error_bound_property(s):
+    m = lut_lib.build_recip_lut(CFG)
+    r, e = lut_lib.recip_lookup(jnp.int32(s), m, CFG)
+    approx = float(r) * 2.0 ** float(e)
+    assert abs(approx * s - 1.0) < 2.0 ** -CFG.recip_index_bits
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=-128, max_value=127))
+def test_exp_lookup_matches_table(z):
+    t = lut_lib.build_exp_lut(CFG)
+    got = lut_lib.exp_lookup(jnp.int8(z), t)
+    assert int(got) == int(t[z + 128])
+
+
+def test_lut_footprint_is_tiny():
+    # the whole LUT pair fits any VMEM/SRAM budget (paper: 0.34% energy)
+    assert CFG.lut_bytes <= 4096

@@ -1,0 +1,102 @@
+"""int8 quantization datapath: round-trips, requant unit, STE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as qlib
+
+
+def test_quant_dequant_roundtrip(rng):
+    x = rng.normal(0, 1, (64, 64)).astype(np.float32)
+    s = qlib.absmax_scale(x)
+    q = qlib.quantize(x, s)
+    err = np.abs(qlib.dequantize(q, s) - x)
+    assert q.dtype == jnp.int8
+    assert float(err.max()) <= float(s) / 2 + 1e-7
+
+
+def test_absmax_scale_per_axis(rng):
+    x = rng.normal(0, 1, (4, 32)).astype(np.float32)
+    s = qlib.absmax_scale(x, axis=1)
+    assert s.shape == (4, 1)
+    q = qlib.quantize(x, s)
+    assert int(np.abs(np.asarray(q)).max()) == 127
+
+
+def test_requant_float_vs_bitexact(rng):
+    acc = rng.integers(-2**20, 2**20, (512,)).astype(np.int32)
+    for mult in (0.001, 0.0117, 1e-5, 0.3):
+        a = qlib.requantize_int32(jnp.asarray(acc), jnp.float32(mult))
+        b = qlib.requantize_int32_bitexact(jnp.asarray(acc),
+                                           jnp.float32(mult))
+        # the Q15 hardware pipeline agrees within 1 LSB of the ideal
+        assert int(np.abs(np.asarray(a, np.int32)
+                          - np.asarray(b, np.int32)).max()) <= 1
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=-(2**24), max_value=2**24),
+       st.floats(min_value=1e-6, max_value=0.9))
+def test_requant_bitexact_property(acc, mult):
+    a = qlib.requantize_int32(jnp.int32(acc), jnp.float32(mult))
+    b = qlib.requantize_int32_bitexact(jnp.int32(acc), jnp.float32(mult))
+    assert abs(int(a) - int(b)) <= 1
+
+
+def test_fake_quant_forward_is_quant_grid(rng):
+    x = rng.normal(0, 1, (128,)).astype(np.float32)
+    s = jnp.float32(0.02)
+    y = qlib.fake_quant(jnp.asarray(x), s)
+    grid = np.round(np.asarray(y) / 0.02)
+    assert np.allclose(grid, np.round(np.clip(x / 0.02, -128, 127)))
+
+
+def test_fake_quant_ste_gradient():
+    s = jnp.float32(0.1)
+    g = jax.grad(lambda x: jnp.sum(qlib.fake_quant(x, s)))(
+        jnp.asarray([0.5, -0.3, 100.0, -100.0], jnp.float32))
+    # straight-through inside the clip range, zero outside
+    assert np.array_equal(np.asarray(g), [1.0, 1.0, 0.0, 0.0])
+
+
+def test_quantized_tensor_pytree(rng):
+    x = rng.normal(0, 1, (8, 8)).astype(np.float32)
+    qt = qlib.QuantizedTensor.from_float(jnp.asarray(x))
+    leaves = jax.tree.leaves(qt)
+    assert len(leaves) == 2
+    np.testing.assert_allclose(np.asarray(qt.dequantize()), x,
+                               atol=float(qt.scale) / 2 + 1e-7)
+
+
+def test_quantize_weights_for_serving(rng):
+    """int8 resident serve weights: structure transform + numeric fidelity."""
+    import jax
+    from repro.configs import get_arch
+    from repro.core.quantization import quantize_weights_for_serving
+    from repro.launch import steps as st
+    from repro.models import transformer as T
+
+    arch = get_arch("olmo_1b")
+    cfg = arch.smoke.replace(dtype="float32")
+    params = st.init_params_fn(cfg)(jax.random.PRNGKey(0))
+    qp = quantize_weights_for_serving(params)
+    # every 2D+ "w"/"table" leaf became int8 payload + scale
+    flat = {"/".join(str(k) for k in path): leaf for path, leaf in
+            jax.tree_util.tree_flatten_with_path(qp)[0]}
+    assert any("w_q" in k for k in flat)
+    assert all(leaf.dtype == jnp.int8 for k, leaf in flat.items()
+               if k.endswith("_q']"))
+    # numerics: serving forward through int8 weights tracks float weights
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                             cfg.vocab_size)
+    lg_f, _ = T.forward(params, tok, cfg)
+    lg_q, _ = T.forward(qp, tok, cfg)
+    pf = jax.nn.softmax(lg_f[..., :cfg.vocab_size], -1)
+    pq = jax.nn.softmax(lg_q[..., :cfg.vocab_size], -1)
+    tv = 0.5 * float(jnp.mean(jnp.sum(jnp.abs(pf - pq), -1)))
+    assert tv < 0.05, tv
+    # works under eval_shape (dry-run path)
+    shapes = jax.eval_shape(quantize_weights_for_serving, params)
+    assert jax.tree_util.tree_structure(shapes) == \
+        jax.tree_util.tree_structure(qp)

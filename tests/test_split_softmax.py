@@ -1,0 +1,124 @@
+"""Semantics of the LUT split softmax vs the float baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import split_softmax as ss
+from repro.core.lut import LUTConfig, Z_QUANT_MAX
+
+CFG = LUTConfig(scale_z=8.0 / 127)
+EXP_LUT, RECIP_LUT = ss.make_luts(CFG)
+
+
+def test_probs_close_to_float_softmax(rng):
+    z = rng.normal(0, 3, (8, 64)).astype(np.float32)
+    # calibrated clip (what a real calibration pass sets): no saturation
+    cfg = LUTConfig(scale_z=float(np.abs(z).max()) / 127)
+    exp_lut, recip_lut = ss.make_luts(cfg)
+    p_ref = np.asarray(ss.safe_softmax(jnp.asarray(z)))
+    p_lut = np.asarray(ss.lut_split_softmax_probs(
+        jnp.asarray(z), cfg, exp_lut, recip_lut))
+    # int8 score grid (step ~0.07) + 2^-15 exp quant + 8-bit recip table
+    assert np.max(np.abs(p_ref - p_lut)) < 0.05
+    np.testing.assert_allclose(p_lut.sum(-1), 1.0, atol=0.01)
+
+
+def test_saturation_above_clip_flattens(rng):
+    """Scores above the calibration clip saturate to z_quant_max — the
+    documented failure mode of a mis-calibrated scale (DESIGN.md §7)."""
+    z = np.zeros((1, 8), np.float32)
+    z[0, 0], z[0, 1] = 12.0, 10.0          # both above clip=8 -> same bucket
+    p = np.asarray(ss.lut_split_softmax_probs(
+        jnp.asarray(z), CFG, EXP_LUT, RECIP_LUT))
+    assert abs(p[0, 0] - p[0, 1]) < 1e-6   # flattened among saturated
+
+
+def test_exact_recip_ablation_tightens(rng):
+    z = rng.normal(0, 2, (8, 64)).astype(np.float32)
+    cfg = LUTConfig(scale_z=float(np.abs(z).max()) / 127)
+    el, rl = ss.make_luts(cfg)
+    p_ref = np.asarray(ss.safe_softmax(jnp.asarray(z)))
+    p_l = np.asarray(ss.lut_split_softmax_probs(
+        jnp.asarray(z), cfg, el, rl))
+    p_e = np.asarray(ss.lut_split_softmax_probs(
+        jnp.asarray(z), cfg, el, rl, exact_recip=True))
+    # recip-LUT error is bounded: the ablation differs from exact division
+    # by at most the mid-rise table step (2^-9 relative)
+    assert np.max(np.abs(p_e - p_l)) < 2.0 ** -8
+    # and both sit within quantization error of the float softmax
+    assert np.mean(np.abs(p_e - p_ref)) < 1e-3
+    # exact-recip probabilities sum to 1 to float precision
+    np.testing.assert_allclose(p_e.sum(-1), 1.0, atol=1e-5)
+
+
+def test_zquantmax_shift_is_exact_in_float():
+    """softmax is shift-invariant: replacing the row max with the static
+    z_quant_max ceiling changes nothing in exact arithmetic — the paper's
+    core argument, checked in float."""
+    z = jnp.asarray([[1.0, 2.0, 3.0], [-5.0, 0.0, 5.0]], jnp.float32)
+    p1 = ss.safe_softmax(z)
+    zdot = z - Z_QUANT_MAX * CFG.scale_z
+    e = jnp.exp(zdot)
+    p2 = e / jnp.sum(e, -1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=2e-5)
+
+
+def test_masked_lanes_never_contribute(rng):
+    z = rng.normal(0, 2, (4, 32)).astype(np.float32)
+    mask = np.ones((4, 32), bool)
+    mask[:, 20:] = False
+    p = np.asarray(ss.lut_split_softmax_probs(
+        jnp.asarray(z), CFG, EXP_LUT, RECIP_LUT, mask=jnp.asarray(mask)))
+    assert np.all(p[:, 20:] == 0.0)
+
+
+def test_fakequant_matches_int8_probs(rng):
+    """The QAT forward and the deployed LUT path see the same scores."""
+    z = rng.normal(0, 3, (4, 48)).astype(np.float32)
+    p_fq = np.asarray(ss.fakequant_split_softmax(jnp.asarray(z), CFG))
+    p_int8 = np.asarray(ss.lut_split_softmax_probs(
+        jnp.asarray(z), CFG, EXP_LUT, RECIP_LUT, exact_recip=True))
+    # difference only from 2^-15 exp-table rounding
+    assert np.max(np.abs(p_fq - p_int8)) < 2e-3
+
+
+def test_fakequant_gradient_nonzero(rng):
+    z = jnp.asarray(rng.normal(0, 2, (4, 16)).astype(np.float32))
+    g = jax.grad(lambda z: jnp.sum(ss.fakequant_split_softmax(z, CFG)[..., 0])
+                 )(z)
+    assert bool(jnp.any(g != 0)) and bool(jnp.all(jnp.isfinite(g)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=2, max_value=64),
+       st.floats(min_value=0.5, max_value=6.0))
+def test_probs_are_distribution_property(n, sigma):
+    rng = np.random.default_rng(n)
+    z = rng.normal(0, sigma, (3, n)).astype(np.float32)
+    p = np.asarray(ss.lut_split_softmax_probs(
+        jnp.asarray(z), CFG, EXP_LUT, RECIP_LUT))
+    assert np.all(p >= 0)
+    assert np.all(p.sum(-1) < 1.02)
+    # rows with any unmasked weight sum to ~1 unless all exps underflowed
+    live = p.sum(-1) > 0
+    if live.any():
+        assert np.all(np.abs(p.sum(-1)[live] - 1.0) < 0.02)
+
+
+def test_split_attention_epilogue(rng):
+    z = rng.normal(0, 3, (2, 16, 16)).astype(np.float32)
+    cfg = LUTConfig(scale_z=float(np.abs(z).max()) / 127)
+    el, rl = ss.make_luts(cfg)
+    v_q = rng.integers(-128, 128, (2, 16, 8)).astype(np.int8)
+    out, out_q = ss.split_softmax_attention(
+        jnp.asarray(z), jnp.asarray(v_q), jnp.float32(0.02), cfg,
+        el, rl, out_scale=jnp.float32(0.05))
+    p = np.asarray(ss.safe_softmax(jnp.asarray(z)))
+    want = p @ (np.asarray(v_q, np.float32) * 0.02)
+    # error budget: int8 score step ~0.072 -> e^{+-0.036} ~ 3.6% per prob,
+    # + 2^-15 exp rounding at the row floor (~1.5% at e~66) + 0.4% recip;
+    # times |p . v| <= 2.55 without averaging -> ~0.3 worst case
+    np.testing.assert_allclose(np.asarray(out), want, atol=0.3)
+    assert out_q.dtype == jnp.int8
