@@ -1,0 +1,30 @@
+# Developer / CI entry points.
+#
+# `make test` is the tier-1 gate (ROADMAP.md): a collect-only smoke step
+# first, so import-time breakage (a missing package, an API rename) fails in
+# seconds instead of surfacing mid-suite, then the full run.
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test collect kernels dist bench-smoke
+
+# fail fast on import/collection errors across every test module
+collect:
+	$(PY) -m pytest -q --collect-only >/dev/null
+
+# tier-1: the exact command ROADMAP.md names, gated behind collection
+test: collect
+	$(PY) -m pytest -x -q
+
+# focused slices for inner-loop work
+kernels:
+	$(PY) -m pytest -q tests/test_kernels.py
+
+dist:
+	$(PY) -m pytest -q -m "not slow" tests/test_substrate.py \
+	    tests/test_steps_and_sharding.py
+
+# one cheap end-to-end lower on the 512-device host-only mesh
+bench-smoke:
+	$(PY) examples/multi_pod_lower.py --arch olmo_1b --shape decode_32k

@@ -1,0 +1,58 @@
+"""repro.dist — the distributed-execution substrate.
+
+Design note
+===========
+
+Logical-axis scheme (``dist.sharding``)
+---------------------------------------
+Model code never names mesh axes.  It annotates activations with *logical*
+axes drawn from a closed vocabulary::
+
+    batch   global batch            -> all data-parallel mesh axes
+    heads   attention heads         -> "model" (tensor parallelism)
+    mlp     FFN / SSM inner dim     -> "model"
+    vocab   (padded) vocabulary     -> "model"
+    expert  routed-expert dim       -> "model" (expert parallelism)
+    seq     sequence                -> "model" (context parallelism, opt-in)
+    embed   residual-stream feature -> replicated
+
+``shard(x, *logical_axes)`` resolves those names through the binding that
+``axis_rules(mesh, rules)`` installs around a trace (``launch/mesh.py:
+logical_rules`` is the production binding).  With no binding active,
+``shard`` is the identity — one model source serves single-CPU smoke tests,
+the 256-chip pod and the 512-chip multi-pod mesh.  Resolution is guarded:
+a mesh axis is used at most once per array and any dim the bound axes do
+not divide replicates, so annotations are always legal, never load-bearing
+for correctness — only for placement.
+
+Parameter/optimizer/cache placement is *path-pattern* based
+(``param_shardings`` / ``batch_shardings`` / ``cache_shardings``): FSDP over
+"data", TP/EP over "model", pure DP over "pod".  Patterns match trailing
+dims so stacked (scanned) layer weights reuse the per-layer rules unchanged.
+
+Error-feedback invariant (``dist.compression``)
+-----------------------------------------------
+The inter-pod gradient all-reduce ships int8, not f32.  Correctness rests on
+one algebraic invariant, enforced by test::
+
+    g + e == dequant(quant(g + e)) + e'
+
+The residual ``e'`` (what int8 could not represent this step) is carried
+into the next step's quantization, so compression *defers* information, it
+never drops it; SGD on the compressed stream converges to the uncompressed
+fixed point.  ``compressed_psum(grads, err, axis_name)`` is the one entry
+point: ``axis_name=None`` gives the identity-reduce with identical
+quantization numerics, a named axis all-gathers the int8 payload (the wire
+format) under ``pmap``/``shard_map`` and means locally.
+
+Straggler detection (``dist.straggler``)
+----------------------------------------
+Synchronous data parallelism runs at the pace of the slowest host.
+``StragglerWatchdog`` flags steps slower than ``threshold`` x the windowed
+*median* duration and emits structured :class:`StragglerReport`\\ s —
+advisory, never fatal; the trainer logs them and scale-out tooling decides.
+"""
+from repro.dist import compression, sharding, straggler  # noqa: F401
+from repro.dist.sharding import axis_rules, shard  # noqa: F401
+from repro.dist.straggler import (StragglerReport,  # noqa: F401
+                                  StragglerWatchdog)

@@ -1,0 +1,84 @@
+"""INT8 error-feedback gradient compression for the inter-pod all-reduce.
+
+The pod axis of the production mesh is pure data parallelism, so its gradient
+all-reduce moves full f32 gradients over the slowest (DCN) links every step.
+This module cuts that wire traffic 4x by quantizing gradients to int8 before
+the collective and carrying the quantization residual forward as *error
+feedback* (1-bit-Adam / EF-SGD lineage): the residual is added to the next
+step's gradient before quantizing, so no information is lost — only deferred.
+
+Invariant (tested):  ``g + e == dequant(q) + e'``  for every leaf, i.e. the
+compressed update plus the new residual exactly reconstructs the uncompressed
+update plus the old residual.  Under that invariant, SGD on the compressed
+stream converges to the same fixed point as uncompressed SGD.
+
+Quantization is the same symmetric absmax int8 scheme the CIMple datapath
+uses everywhere else (``core/quantization.py``) — one numeric substrate for
+activations, weights and collectives.
+
+``compressed_psum`` is transform-agnostic: ``axis_name=None`` runs the
+identity-reduce (single process / debugging) while a string axis name works
+under ``pmap`` and ``shard_map``.  The reduction all-gathers the *int8
+payload* (the compressed representation is what crosses the wire) plus the
+scalar scales, then dequantizes and means locally.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import absmax_scale, dequantize, quantize
+
+
+def init_error(grads: Any) -> Any:
+    """Zero error-feedback residuals shaped like ``grads`` (always f32)."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress(grads: Any, error: Any) -> Tuple[Any, Any, Any]:
+    """Quantize ``grads + error`` to int8; return (payload, scales, error').
+
+    Per leaf: ``v = g + e``; ``q = quant(v)``; ``e' = v - dequant(q)``.
+    Scales are per-tensor scalars (what a collective can ship cheaply).
+    """
+    v = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, error)
+    scales = jax.tree.map(lambda x: absmax_scale(x), v)
+    payload = jax.tree.map(quantize, v, scales)
+    new_error = jax.tree.map(lambda x, q, s: x - dequantize(q, s),
+                             v, payload, scales)
+    return payload, scales, new_error
+
+
+def decompress(payload: Any, scales: Any) -> Any:
+    """Dequantize an int8 payload tree back to f32."""
+    return jax.tree.map(dequantize, payload, scales)
+
+
+def _gathered_mean(q: jax.Array, s: jax.Array, axis_name: str) -> jax.Array:
+    """All-gather int8 payload + scale over ``axis_name``; dequantize and
+    mean locally.  int8 (not f32) is what crosses the wire — 4x less DCN
+    traffic than a plain psum of float gradients."""
+    qg = jax.lax.all_gather(q, axis_name)                  # (n, ...) int8
+    sg = jax.lax.all_gather(s, axis_name)                  # (n,) f32
+    sg = sg.reshape((sg.shape[0],) + (1,) * (qg.ndim - 1))
+    return jnp.mean(qg.astype(jnp.float32) * sg, axis=0)
+
+
+def compressed_psum(grads: Any, error: Any,
+                    axis_name: Optional[str]) -> Tuple[Any, Any]:
+    """Mean-reduce ``grads`` over ``axis_name`` through the int8 wire format.
+
+    Returns ``(reduced, error')``.  ``error'`` is the *local* residual — each
+    participant keeps its own feedback state (standard EF-SGD).  With
+    ``axis_name=None`` (outside any transform) the reduce degenerates to
+    plain dequantization, so single-process smoke paths share the exact
+    quantization numerics of the distributed path.
+    """
+    payload, scales, new_error = compress(grads, error)
+    if axis_name is None:
+        return decompress(payload, scales), new_error
+    reduced = jax.tree.map(
+        lambda q, s: _gathered_mean(q, s, axis_name), payload, scales)
+    return reduced, new_error

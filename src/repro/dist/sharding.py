@@ -1,0 +1,304 @@
+"""Distributed sharding: logical-axis annotations + param/batch/cache rules.
+
+Two layers live here:
+
+1. **Logical-axis API** (``shard``, ``axis_rules``) — what the model code
+   calls.  Model files annotate activations with *logical* axis names
+   (``"batch"``, ``"heads"``, ``"mlp"``, ``"vocab"``, ``"expert"``,
+   ``"embed"``, ``"seq"``); the launcher binds those names to physical mesh
+   axes for the duration of a trace with ``axis_rules(mesh, rules)``.
+   Outside any binding, ``shard`` is the identity — the same model code runs
+   unmodified on one CPU device and on a 512-chip multi-pod mesh.
+
+2. **Path-pattern parameter/state rules** (``param_shardings``,
+   ``batch_shardings``, ``cache_shardings``) — FSDP over ``data``, TP/EP
+   over ``model``.  Scheme (per DESIGN.md §5):
+
+   * every weight matrix is tensor-parallel over ``model`` on its
+     "parallelizable" dim (attention heads, FFN inner, vocab, experts) and
+     ZeRO-3/FSDP-sharded over ``data`` on the other dim;
+   * optimizer moments mirror the param specs (they are params-shaped);
+   * the ``pod`` axis is pure data parallelism — params replicate across
+     pods, gradients all-reduce hierarchically (reduce-scatter intra-pod
+     first);
+   * decode caches shard batch over the DP axes and *sequence* over
+     ``model`` (context parallelism — the split softmax is associative over
+     keys, so GSPMD's partial-sum reduction of acc/denominator is exact).
+
+   Rules are path-pattern based so they apply uniformly to stacked (scanned)
+   layer parameters: stacking only prepends layer axes, which get ``None``.
+
+This module migrated from ``repro.launch.sharding``; that name remains a
+deprecation shim.
+"""
+from __future__ import annotations
+
+import contextlib
+import re
+import threading
+from typing import Any, Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes that shard the batch (all data-parallel axes).
+
+    Lives in the dist substrate (not ``launch.mesh``, which re-exports it)
+    so nothing here imports upward from ``repro.launch``.
+    """
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+# ---------------------------------------------------------------------------
+# logical-axis annotation API
+# ---------------------------------------------------------------------------
+
+# One binding per thread: the trace that consumes ``shard`` calls runs on the
+# thread that entered ``axis_rules`` (jit tracing is synchronous), and
+# thread-locality keeps a server thread's serve-mesh binding from leaking
+# into a concurrent trainer trace.
+_BINDING = threading.local()
+
+AxisBinding = Union[None, str, Tuple[str, ...]]
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Dict[str, AxisBinding]):
+    """Bind logical activation axes to mesh axes for the enclosed traces.
+
+    ``rules`` maps a logical name to a mesh axis name, a tuple of mesh axis
+    names (the dim is sharded over their product, e.g. ``("pod", "data")``
+    for the global batch), or ``None`` (replicate).  Logical names missing
+    from ``rules`` replicate.  ``mesh=None`` disables annotation entirely
+    (single-process smoke runs).
+    """
+    prev = getattr(_BINDING, "env", None)
+    _BINDING.env = None if mesh is None else (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _BINDING.env = prev
+
+
+def current_axis_rules() -> Optional[Tuple[Mesh, Dict[str, AxisBinding]]]:
+    """The active ``(mesh, rules)`` binding, or None."""
+    return getattr(_BINDING, "env", None)
+
+
+def _mesh_axes_of(binding: AxisBinding) -> Tuple[str, ...]:
+    if binding is None:
+        return ()
+    if isinstance(binding, str):
+        return (binding,)
+    return tuple(binding)
+
+
+def shard(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names; identity when no
+    ``axis_rules`` binding is active.
+
+    One name (or None) per array dim.  Guards keep the constraint always
+    legal: a mesh axis is used at most once per array (first dim wins), and
+    any dim the bound axes do not divide evenly replicates instead — so the
+    same annotation works for full-size and smoke-size shapes.
+    """
+    env = current_axis_rules()
+    if env is None:
+        return x
+    mesh, rules = env
+    if len(logical_axes) != x.ndim:
+        raise ValueError(
+            f"shard() got {len(logical_axes)} logical axes for a rank-"
+            f"{x.ndim} array: {logical_axes} vs shape {x.shape}")
+    used: set = set()
+    spec = []
+    for dim_size, name in zip(x.shape, logical_axes):
+        axes = _mesh_axes_of(rules.get(name)) if name is not None else ()
+        axes = tuple(a for a in axes if a in mesh.shape)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        if (not axes or any(a in used for a in axes)
+                or dim_size % total != 0):
+            spec.append(None)
+            continue
+        used.update(axes)
+        spec.append(axes[0] if len(axes) == 1 else axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+# ---------------------------------------------------------------------------
+# path-pattern parameter / batch / cache rules
+# ---------------------------------------------------------------------------
+
+def path_str(path) -> str:
+    """Normalize a tree path to 'a/b/c' regardless of key kinds."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+# (path regex, spec for the *trailing* (unstacked) dims)
+# "F" = fsdp axis ("data"), "T" = tensor axis ("model")
+_RULES = [
+    (r"embed/table(_q)?$", ("T", "F")),             # vocab x d_model
+    (r"lm_head/w(_q)?$", ("F", "T")),               # d_model x vocab
+    (r"(wq|wk|wv)/w(_q)?$", ("F", "T")),            # d_in x (heads*hd)
+    (r"wo/w(_q)?$", ("T", "F")),                    # (heads*hd) x d_model
+    (r"(w_in|w_gate)/w(_q)?$", ("F", "T")),         # d x d_ff
+    (r"w_out/w(_q)?$", ("T", "F")),                 # d_ff x d
+    (r"router/w(_q)?$", ("F", None)),               # d x n_experts
+    (r"moe/w_in$", ("E", "F", "T")),           # stacked expert weights
+    (r"moe/w_gate$", ("E", "F", "T")),
+    (r"moe/w_out$", ("E", "T", "F")),
+    (r"in_proj/w(_q)?$", ("F", "T")),               # mamba d x inner-ish
+    (r"out_proj/w(_q)?$", ("T", "F")),
+    (r"x_proj/w(_q)?$", ("T", None)),               # di x (dt_rank + 2n)
+    (r"dt_proj/w(_q)?$", (None, "T")),
+    (r"conv_w$", (None, "T")),                 # (K, channels)
+    (r"ssm/A_log$", ("T", None)),              # mamba1 (di, N); mamba2 (H,)
+    (r"ssm/D$", ("T",)),                       # mamba1 (di,); mamba2 (H,)
+]
+
+
+def _trailing_spec(path: str, leaf, cfg: ModelConfig, mesh: Mesh
+                   ) -> Tuple[Optional[str], ...]:
+    tdims = None
+    for pat, spec in _RULES:
+        if re.search(pat, path):
+            tdims = spec
+            break
+    if tdims is None:
+        return (None,) * leaf.ndim
+    axes = []
+    msize = mesh.shape["model"]
+    fsize = mesh.shape["data"]
+    for d in tdims:
+        if d == "F":
+            axes.append("data")
+        elif d == "T":
+            axes.append("model")
+        elif d == "E":
+            # expert dim: EP over model when divisible, else replicate the
+            # expert dim (TP inside experts still applies via F/T dims)
+            n_e = cfg.moe.n_experts if cfg.moe else 0
+            axes.append("model" if n_e and n_e % msize == 0 else None)
+        else:
+            axes.append(None)
+    # special cases: mamba1 A_log/D are 2D/1D with di leading (handled above);
+    # 1D leaves fall through to replicate
+    n_lead = leaf.ndim - len(axes)
+    if n_lead < 0:
+        return (None,) * leaf.ndim
+    spec = [None] * n_lead + axes
+    # EP + TP conflict: if expert dim took "model", inner dims must not
+    if "model" in spec[n_lead:] and spec.count("model") > 1:
+        seen = False
+        for i, a in enumerate(spec):
+            if a == "model":
+                if seen:
+                    spec[i] = None
+                seen = True
+    # divisibility guard: replicate any dim the mesh does not divide
+    sizes = {"data": fsize, "model": msize}
+    for i, a in enumerate(spec):
+        if a is not None and leaf.shape[i] % sizes[a] != 0:
+            spec[i] = None
+    return tuple(spec)
+
+
+def param_shardings(params_shape: Any, cfg: ModelConfig, mesh: Mesh,
+                    fsdp: bool = True) -> Any:
+    """Pytree of NamedShardings matching ``params_shape`` (shapes or arrays).
+
+    ``fsdp=False`` (serve-time TP-only mode): the "data" factor of every
+    weight spec is dropped, so weights are resident TP shards and no
+    per-step FSDP all-gather is needed — decode steps become gather-free at
+    the cost of replicating each TP shard across the data axis (requires
+    bf16/int8 params for the big architectures to fit HBM).
+    """
+
+    def one(path, leaf):
+        spec = _trailing_spec(path_str(path), leaf, cfg, mesh)
+        if not fsdp:
+            spec = tuple(None if a == "data" else a for a in spec)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def _dp_for(batch_dim: int, mesh: Mesh):
+    """Largest prefix of DP axes that divides the batch (b=1 -> replicate)."""
+    dp = batch_axes(mesh)
+    while dp:
+        n = 1
+        for a in dp:
+            n *= mesh.shape[a]
+        if batch_dim % n == 0:
+            return dp
+        dp = dp[1:]
+    return None
+
+
+def batch_shardings(batch_shape: Any, mesh: Mesh) -> Any:
+    """Data batches: leading dim over the DP axes (guarded for divisibility,
+    e.g. the long_500k cell's global_batch=1 replicates), rest replicated."""
+
+    def one(leaf):
+        spec = [_dp_for(leaf.shape[0], mesh)] + [None] * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree.map(one, batch_shape)
+
+
+def cache_shardings(cache_shape: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
+    """Decode caches.
+
+    KV tensors (L, B, Hkv, S, hd): batch over DP, sequence over ``model``
+    (context parallelism).  SSM states (L, B, ...): batch over DP, inner
+    (d_inner / heads) dim over ``model``.  Scalars/lengths replicate.
+    """
+    msize = mesh.shape["model"]
+
+    def one(path, leaf):
+        key = path_str(path)
+        if leaf.ndim == 5 and ("k_q" in key or "v_q" in key
+                               or "cross_k" in key or "cross_v" in key):
+            dp = _dp_for(leaf.shape[1], mesh)
+            seq_ok = leaf.shape[3] % msize == 0
+            return NamedSharding(mesh, P(None, dp,
+                                         None, "model" if seq_ok else None,
+                                         None))
+        if "ssm/conv" in key or ("conv" in key and leaf.ndim == 4):
+            # (L, B, K-1, C): channels over model
+            dp = _dp_for(leaf.shape[1], mesh)
+            ok = leaf.shape[-1] % msize == 0
+            return NamedSharding(mesh, P(None, dp, None,
+                                         "model" if ok else None))
+        if "ssm/h" in key or ("/h" in key and leaf.ndim >= 4):
+            # mamba1 (L,B,di,N) / mamba2 (L,B,H,N,P): inner dim over model
+            dp = _dp_for(leaf.shape[1], mesh)
+            ok = leaf.shape[2] % msize == 0
+            spec = [None, dp, "model" if ok else None] + [None] * (
+                leaf.ndim - 3)
+            return NamedSharding(mesh, P(*spec))
+        if leaf.ndim == 1 and "length" in key:
+            return NamedSharding(mesh, P(_dp_for(leaf.shape[0], mesh)))
+        if leaf.ndim == 5:  # scale tensors (L,1,1,1,1)
+            return NamedSharding(mesh, P(None, None, None, None, None))
+        return NamedSharding(mesh, P(*([None] * leaf.ndim)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

@@ -1,0 +1,106 @@
+"""Windowed-median straggler watchdog for the training loop.
+
+At multi-pod scale a single slow host (thermal throttling, a dying SSD, a
+noisy neighbour) stretches every synchronous step: the collective waits for
+the last arrival.  The watchdog keeps a sliding window of recent step
+durations and flags any step whose duration exceeds ``threshold`` times the
+window *median* — the median (not mean) so that the flagged outliers
+themselves cannot drag the baseline upward fast enough to mask a persistent
+regression.
+
+Reports are structured (:class:`StragglerReport`) so the launcher can log
+them, export them to a metrics pipe, or trigger host replacement; the
+watchdog itself never raises — detection is advisory.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from collections import deque
+from typing import Callable, Deque, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class StragglerReport:
+    """One flagged step: how slow, relative to what baseline."""
+
+    step: int
+    seconds: float
+    median: float          # window median the step was judged against
+    ratio: float           # seconds / median
+    window: int            # observations in the window at flag time
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class StragglerWatchdog:
+    """Flag steps slower than ``threshold`` x the windowed median duration.
+
+    ``observe(step, seconds)`` records one step and returns a
+    :class:`StragglerReport` when it is an outlier (None otherwise).  The
+    median is computed over observations *before* the current one, and at
+    least ``min_history`` samples are required — the first steps (compile,
+    cache warmup) never flag against an empty baseline.
+
+    ``start_step()`` / ``end_step(step)`` wrap the wall-clock timing for
+    loop-style use (see ``launch/train.py``).  ``on_straggler`` is invoked
+    synchronously with each report; all reports accumulate in ``reports``.
+    """
+
+    def __init__(self, window: int = 50, threshold: float = 2.0,
+                 min_history: int = 1,
+                 on_straggler: Optional[Callable[[StragglerReport], None]]
+                 = None):
+        assert window >= 1 and threshold > 1.0 and min_history >= 1
+        self.window = window
+        self.threshold = threshold
+        self.min_history = min_history
+        self.on_straggler = on_straggler
+        self.reports: List[StragglerReport] = []
+        self._durations: Deque[float] = deque(maxlen=window)
+        self._t0: Optional[float] = None
+
+    # ---- timing convenience --------------------------------------------
+
+    def start_step(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def end_step(self, step: int) -> Optional[StragglerReport]:
+        if self._t0 is None:
+            return None
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        return self.observe(step, dt)
+
+    # ---- core ----------------------------------------------------------
+
+    def observe(self, step: int, seconds: float
+                ) -> Optional[StragglerReport]:
+        report = None
+        if len(self._durations) >= self.min_history:
+            med = statistics.median(self._durations)
+            if med > 0 and seconds > self.threshold * med:
+                report = StragglerReport(step=step, seconds=seconds,
+                                         median=med, ratio=seconds / med,
+                                         window=len(self._durations))
+        # flagged steps enter the window too: a *persistent* slowdown
+        # raises the median and stops flagging (it is the new normal);
+        # the median keeps isolated spikes from polluting the baseline
+        self._durations.append(seconds)
+        if report is not None:
+            self.reports.append(report)
+            if self.on_straggler is not None:
+                self.on_straggler(report)
+        return report
+
+    def summary(self) -> dict:
+        """Aggregate view for end-of-run logging."""
+        med = (statistics.median(self._durations)
+               if self._durations else None)
+        return {"observed": len(self._durations),
+                "flagged": len(self.reports),
+                "window_median_s": med,
+                "worst_ratio": max((r.ratio for r in self.reports),
+                                   default=None)}

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import tpu_compiler_params
+
 
 def _int8_matmul_kernel(scalars_ref, x_ref, w_ref, out_ref, acc_ref, *,
                         num_k_blocks: int, requant: bool):
@@ -87,7 +89,7 @@ def int8_matmul_pallas(
                           num_k_blocks=k // block_k, requant=requant),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(scalars, x_q, w_q)

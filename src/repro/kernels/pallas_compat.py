@@ -1,0 +1,25 @@
+"""JAX-version compatibility for the Pallas TPU kernels.
+
+The TPU compiler-params dataclass was renamed across JAX releases:
+``pltpu.TPUCompilerParams`` (0.4.x) became ``pltpu.CompilerParams`` (newer
+releases, which keep the old name only as a deprecated alias for a while).
+The kernels call :func:`tpu_compiler_params` instead of either name so one
+source tree runs against both generations of the toolchain.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# Prefer the new name so the deprecated alias (when both exist) is never
+# touched; fall back to the 0.4.x name.
+_COMPILER_PARAMS_CLS = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kwargs):
+    """Build the TPU compiler-params object for ``pl.pallas_call``.
+
+    Keyword arguments (``dimension_semantics=...`` etc.) pass through
+    unchanged — the dataclass fields kept their names across the rename.
+    """
+    return _COMPILER_PARAMS_CLS(**kwargs)

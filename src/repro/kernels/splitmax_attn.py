@@ -37,6 +37,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import tpu_compiler_params
+
 from repro.core.lut import LUTConfig
 
 NEG_DOMAIN = 128  # index offset: z_q in [-128, 127] -> [0, 255]
@@ -254,7 +256,7 @@ def splitmax_attention_pallas(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(scalars, qf, kf, vf, _replicate_table(exp_lut),

@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import tpu_compiler_params
+
 from repro.core.lut import LUTConfig
 from repro.kernels.splitmax_attn import (_onehot_lookup, _recip_lut_inline,
                                          _replicate_table)
@@ -183,7 +185,7 @@ def splitmax_decode_pallas(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b * hkv, g_pad, d), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(cache_len.astype(jnp.int32), scalars, qf, kf, vf,

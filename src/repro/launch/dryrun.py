@@ -27,9 +27,8 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import ARCH_IDS, get_arch          # noqa: E402
 from repro.configs.base import SHAPES                 # noqa: E402
-from repro.dist.sharding import axis_rules            # noqa: E402
+from repro.dist import sharding as sh                 # noqa: E402
 from repro.launch import roofline as rl               # noqa: E402
-from repro.launch import sharding as sh               # noqa: E402
 from repro.launch import steps as st                  # noqa: E402
 from repro.launch.mesh import (batch_axes, logical_rules,  # noqa: E402
                                make_production_mesh)
@@ -90,7 +89,7 @@ def dryrun_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     in_specs = arch.input_specs(shape_name)
     b_shard = sh.batch_shardings(in_specs, mesh)
 
-    with axis_rules(mesh, logical_rules(mesh)):
+    with sh.axis_rules(mesh, logical_rules(mesh)):
         if cell.kind == "train":
             opt_shape = jax.eval_shape(adamw.init_state, params_shape)
             o_shard = sh.param_shardings(opt_shape.mu, cfg, mesh)

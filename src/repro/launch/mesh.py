@@ -6,21 +6,18 @@ must set ``XLA_FLAGS`` before anything initializes jax devices.
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 from jax.sharding import Mesh
+
+from repro.dist.sharding import batch_axes  # noqa: F401  (re-export)
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
-
-
-def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
-    """Mesh axes that shard the batch (all data-parallel axes)."""
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 
 
 def logical_rules(mesh: Mesh) -> Dict[str, object]:

@@ -1,196 +1,28 @@
-"""Parameter / state sharding rules: FSDP over ``data``, TP/EP over ``model``.
+"""Deprecation shim — the sharding machinery moved to ``repro.dist.sharding``.
 
-Scheme (per DESIGN.md §5):
-  * every weight matrix is tensor-parallel over ``model`` on its
-    "parallelizable" dim (attention heads, FFN inner, vocab, experts) and
-    ZeRO-3/FSDP-sharded over ``data`` on the other dim;
-  * optimizer moments mirror the param specs (they are params-shaped);
-  * the ``pod`` axis is pure data parallelism — params replicate across pods,
-    gradients all-reduce hierarchically (reduce-scatter intra-pod first);
-  * decode caches shard batch over the DP axes and *sequence* over ``model``
-    (context parallelism — the split softmax is associative over keys, so
-    GSPMD's partial-sum reduction of acc/denominator is exact).
-
-Rules are path-pattern based so they apply uniformly to stacked (scanned)
-layer parameters: stacking only prepends layer axes, which get ``None``.
+Every public name (and the underscore helpers the tests poke) re-exports
+from the new home; importing this module warns once.  New code should import
+``repro.dist.sharding`` directly.
 """
 from __future__ import annotations
 
-import re
-from typing import Any, Dict, Optional, Tuple
+import warnings
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.dist.sharding import (  # noqa: F401
+    _dp_for,
+    _trailing_spec,
+    axis_rules,
+    batch_shardings,
+    cache_shardings,
+    param_shardings,
+    path_str,
+    replicated,
+    shard,
+)
 
-from repro.launch.mesh import batch_axes
-from repro.models.config import ModelConfig
-
-def path_str(path) -> str:
-    """Normalize a tree path to 'a/b/c' regardless of key kinds."""
-    parts = []
-    for p in path:
-        if hasattr(p, "key"):
-            parts.append(str(p.key))
-        elif hasattr(p, "idx"):
-            parts.append(str(p.idx))
-        else:
-            parts.append(str(p))
-    return "/".join(parts)
-
-
-# (path regex, spec for the *trailing* (unstacked) dims)
-# "F" = fsdp axis ("data"), "T" = tensor axis ("model")
-_RULES = [
-    (r"embed/table(_q)?$", ("T", "F")),             # vocab x d_model
-    (r"lm_head/w(_q)?$", ("F", "T")),               # d_model x vocab
-    (r"(wq|wk|wv)/w(_q)?$", ("F", "T")),            # d_in x (heads*hd)
-    (r"wo/w(_q)?$", ("T", "F")),                    # (heads*hd) x d_model
-    (r"(w_in|w_gate)/w(_q)?$", ("F", "T")),         # d x d_ff
-    (r"w_out/w(_q)?$", ("T", "F")),                 # d_ff x d
-    (r"router/w(_q)?$", ("F", None)),               # d x n_experts
-    (r"moe/w_in$", ("E", "F", "T")),           # stacked expert weights
-    (r"moe/w_gate$", ("E", "F", "T")),
-    (r"moe/w_out$", ("E", "T", "F")),
-    (r"in_proj/w(_q)?$", ("F", "T")),               # mamba d x inner-ish
-    (r"out_proj/w(_q)?$", ("T", "F")),
-    (r"x_proj/w(_q)?$", ("T", None)),               # di x (dt_rank + 2n)
-    (r"dt_proj/w(_q)?$", (None, "T")),
-    (r"conv_w$", (None, "T")),                 # (K, channels)
-    (r"ssm/A_log$", ("T", None)),              # mamba1 (di, N); mamba2 (H,)
-    (r"ssm/D$", ("T",)),                       # mamba1 (di,); mamba2 (H,)
-]
-
-
-def _trailing_spec(path: str, leaf, cfg: ModelConfig, mesh: Mesh
-                   ) -> Tuple[Optional[str], ...]:
-    tdims = None
-    for pat, spec in _RULES:
-        if re.search(pat, path):
-            tdims = spec
-            break
-    if tdims is None:
-        return (None,) * leaf.ndim
-    axes = []
-    msize = mesh.shape["model"]
-    fsize = mesh.shape["data"]
-    for d in tdims:
-        if d == "F":
-            axes.append("data")
-        elif d == "T":
-            axes.append("model")
-        elif d == "E":
-            # expert dim: EP over model when divisible, else replicate the
-            # expert dim (TP inside experts still applies via F/T dims)
-            n_e = cfg.moe.n_experts if cfg.moe else 0
-            axes.append("model" if n_e and n_e % msize == 0 else None)
-        else:
-            axes.append(None)
-    # special cases: mamba1 A_log/D are 2D/1D with di leading (handled above);
-    # 1D leaves fall through to replicate
-    n_lead = leaf.ndim - len(axes)
-    if n_lead < 0:
-        return (None,) * leaf.ndim
-    spec = [None] * n_lead + axes
-    # EP + TP conflict: if expert dim took "model", inner dims must not
-    if "model" in spec[n_lead:] and spec.count("model") > 1:
-        seen = False
-        for i, a in enumerate(spec):
-            if a == "model":
-                if seen:
-                    spec[i] = None
-                seen = True
-    # divisibility guard: replicate any dim the mesh does not divide
-    sizes = {"data": fsize, "model": msize}
-    for i, a in enumerate(spec):
-        if a is not None and leaf.shape[i] % sizes[a] != 0:
-            spec[i] = None
-    return tuple(spec)
-
-
-def param_shardings(params_shape: Any, cfg: ModelConfig, mesh: Mesh,
-                    fsdp: bool = True) -> Any:
-    """Pytree of NamedShardings matching ``params_shape`` (shapes or arrays).
-
-    ``fsdp=False`` (serve-time TP-only mode): the "data" factor of every
-    weight spec is dropped, so weights are resident TP shards and no
-    per-step FSDP all-gather is needed — decode steps become gather-free at
-    the cost of replicating each TP shard across the data axis (requires
-    bf16/int8 params for the big architectures to fit HBM).
-    """
-
-    def one(path, leaf):
-        spec = _trailing_spec(path_str(path), leaf, cfg, mesh)
-        if not fsdp:
-            spec = tuple(None if a == "data" else a for a in spec)
-        return NamedSharding(mesh, P(*spec))
-
-    return jax.tree_util.tree_map_with_path(one, params_shape)
-
-
-def replicated(mesh: Mesh) -> NamedSharding:
-    return NamedSharding(mesh, P())
-
-
-def _dp_for(batch_dim: int, mesh: Mesh):
-    """Largest prefix of DP axes that divides the batch (b=1 -> replicate)."""
-    dp = batch_axes(mesh)
-    while dp:
-        n = 1
-        for a in dp:
-            n *= mesh.shape[a]
-        if batch_dim % n == 0:
-            return dp
-        dp = dp[1:]
-    return None
-
-
-def batch_shardings(batch_shape: Any, mesh: Mesh) -> Any:
-    """Data batches: leading dim over the DP axes (guarded for divisibility,
-    e.g. the long_500k cell's global_batch=1 replicates), rest replicated."""
-
-    def one(leaf):
-        spec = [_dp_for(leaf.shape[0], mesh)] + [None] * (leaf.ndim - 1)
-        return NamedSharding(mesh, P(*spec))
-
-    return jax.tree.map(one, batch_shape)
-
-
-def cache_shardings(cache_shape: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
-    """Decode caches.
-
-    KV tensors (L, B, Hkv, S, hd): batch over DP, sequence over ``model``
-    (context parallelism).  SSM states (L, B, ...): batch over DP, inner
-    (d_inner / heads) dim over ``model``.  Scalars/lengths replicate.
-    """
-    msize = mesh.shape["model"]
-
-    def one(path, leaf):
-        key = path_str(path)
-        if leaf.ndim == 5 and ("k_q" in key or "v_q" in key
-                               or "cross_k" in key or "cross_v" in key):
-            dp = _dp_for(leaf.shape[1], mesh)
-            seq_ok = leaf.shape[3] % msize == 0
-            return NamedSharding(mesh, P(None, dp,
-                                         None, "model" if seq_ok else None,
-                                         None))
-        if "ssm/conv" in key or ("conv" in key and leaf.ndim == 4):
-            # (L, B, K-1, C): channels over model
-            dp = _dp_for(leaf.shape[1], mesh)
-            ok = leaf.shape[-1] % msize == 0
-            return NamedSharding(mesh, P(None, dp, None,
-                                         "model" if ok else None))
-        if "ssm/h" in key or ("/h" in key and leaf.ndim >= 4):
-            # mamba1 (L,B,di,N) / mamba2 (L,B,H,N,P): inner dim over model
-            dp = _dp_for(leaf.shape[1], mesh)
-            ok = leaf.shape[2] % msize == 0
-            spec = [None, dp, "model" if ok else None] + [None] * (
-                leaf.ndim - 3)
-            return NamedSharding(mesh, P(*spec))
-        if leaf.ndim == 1 and "length" in key:
-            return NamedSharding(mesh, P(_dp_for(leaf.shape[0], mesh)))
-        if leaf.ndim == 5:  # scale tensors (L,1,1,1,1)
-            return NamedSharding(mesh, P(None, None, None, None, None))
-        return NamedSharding(mesh, P(*([None] * leaf.ndim)))
-
-    return jax.tree_util.tree_map_with_path(one, cache_shape)
+warnings.warn(
+    "repro.launch.sharding moved to repro.dist.sharding; this alias will be "
+    "removed in a future PR",
+    DeprecationWarning,
+    stacklevel=2,
+)

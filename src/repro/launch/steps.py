@@ -7,6 +7,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.dist import compression as comp
 from repro.models import encdec as E
 from repro.models import layers as L
 from repro.models import transformer as T
@@ -64,7 +65,9 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptimizerConfig):
 
     Gradients are implicitly mean-reduced across the DP axes by GSPMD (the
     loss is a mean over the batch dim, which is sharded over data/pod); the
-    explicit hierarchical/compressed variant lives in launch/train.py.
+    int8 error-feedback variant is :func:`make_compressed_train_step`
+    (``launch/train.py --compress-grads``); the hierarchical inter-pod
+    shard_map reduce is a ROADMAP item.
     """
 
     def train_step(params, opt_state, batch):
@@ -74,6 +77,30 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptimizerConfig):
             params, grads, opt_state, opt_cfg)
         metrics.update(opt_metrics)
         return params, opt_state, metrics
+
+    return train_step
+
+
+def make_compressed_train_step(cfg: ModelConfig,
+                               opt_cfg: adamw.OptimizerConfig):
+    """(params, opt_state, err, batch) -> (params, opt_state, err, metrics).
+
+    Like :func:`make_train_step` but the gradient passes through the int8
+    error-feedback pipe (``repro.dist.compression``) before the optimizer:
+    the update is computed from ``dequant(quant(g + e))`` and the residual
+    ``e`` carries to the next step.  Cross-device mean-reduction stays with
+    GSPMD (``axis_name=None``); the pipe applies the exact wire-format
+    numerics, so convergence under compression is what this step measures.
+    ``err`` comes from ``repro.dist.compression.init_error(params)``.
+    """
+    def train_step(params, opt_state, err, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg)
+        grads, err = comp.compressed_psum(grads, err, axis_name=None)
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics.update(opt_metrics)
+        return params, opt_state, err, metrics
 
     return train_step
 

@@ -28,9 +28,9 @@ import numpy as np
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs import get_arch
 from repro.data.pipeline import DataConfig, batch_for_step
-from repro.dist.sharding import axis_rules
+from repro.dist import compression
+from repro.dist import sharding as sh
 from repro.dist.straggler import StragglerWatchdog
-from repro.launch import sharding as sh
 from repro.launch import steps as st
 from repro.launch.mesh import logical_rules, make_production_mesh
 from repro.optim import adamw
@@ -49,6 +49,10 @@ def main(argv=None) -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    ap.add_argument("--compress-grads", action="store_true",
+                    help="int8 error-feedback gradient compression "
+                         "(repro.dist.compression); the residual is not "
+                         "checkpointed — a resume restarts it at zero")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     args = ap.parse_args(argv)
@@ -75,7 +79,12 @@ def main(argv=None) -> None:
     init_fn = st.init_params_fn(cfg)
     params = init_fn(key)
     opt_state = adamw.init_state(params)
-    train_step = st.make_train_step(cfg, opt_cfg)
+    if args.compress_grads:
+        train_step = st.make_compressed_train_step(cfg, opt_cfg)
+        grad_err = compression.init_error(params)
+    else:
+        train_step = st.make_train_step(cfg, opt_cfg)
+        grad_err = None
 
     if mesh is not None:
         p_shard = sh.param_shardings(params, cfg, mesh)
@@ -86,8 +95,17 @@ def main(argv=None) -> None:
                                  nu=sh.param_shardings(opt_state.nu, cfg,
                                                        mesh))
         opt_state = jax.device_put(opt_state, o_shard)
-        jitted = jax.jit(train_step, in_shardings=(p_shard, o_shard, None),
-                         donate_argnums=(0, 1))
+        if grad_err is not None:
+            grad_err = jax.device_put(grad_err, p_shard)
+            jitted = jax.jit(train_step,
+                             in_shardings=(p_shard, o_shard, p_shard, None),
+                             donate_argnums=(0, 1, 2))
+        else:
+            jitted = jax.jit(train_step,
+                             in_shardings=(p_shard, o_shard, None),
+                             donate_argnums=(0, 1))
+    elif grad_err is not None:
+        jitted = jax.jit(train_step, donate_argnums=(0, 1, 2))
     else:
         jitted = jax.jit(train_step, donate_argnums=(0, 1))
 
@@ -110,13 +128,17 @@ def main(argv=None) -> None:
             f"({r.ratio:.1f}x median)", flush=True))
 
     # ---- loop ---------------------------------------------------------------
-    ctx = axis_rules(mesh, logical_rules(mesh)) if mesh else _null_ctx()
+    ctx = sh.axis_rules(mesh, logical_rules(mesh)) if mesh else _null_ctx()
     with ctx:
         t_start = time.time()
         for step in range(start_step, args.steps):
             batch = batch_for_step(data_cfg, step)
             watchdog.start_step()
-            params, opt_state, metrics = jitted(params, opt_state, batch)
+            if grad_err is not None:
+                params, opt_state, grad_err, metrics = jitted(
+                    params, opt_state, grad_err, batch)
+            else:
+                params, opt_state, metrics = jitted(params, opt_state, batch)
             jax.block_until_ready(metrics["loss"])
             watchdog.end_step(step)
             if ckpt:

@@ -1,0 +1,83 @@
+"""Deterministic stand-in for the slice of the hypothesis API this suite
+uses, for containers without the real package (the test image bakes in the
+jax toolchain only).  The hypothesis-using test modules fall back to this
+via an import-gate.
+
+Semantics: ``@given(st.integers(...), st.floats(...), ...)`` runs the test
+over the two bound-value corner cases (all-min, all-max) plus fixed-seed
+random draws, capped at ``@settings(max_examples=N)``.  Every run executes
+the identical case list — no shrinking, no example database; a failure
+reports the exact argument tuple, which reproduces by construction.
+"""
+from __future__ import annotations
+
+import random
+from types import SimpleNamespace
+
+
+class _IntegerStrategy:
+    def __init__(self, min_value: int, max_value: int):
+        assert max_value >= min_value
+        self.min_value = min_value
+        self.max_value = max_value
+
+    def draw(self, rnd: random.Random) -> int:
+        return rnd.randint(self.min_value, self.max_value)
+
+
+class _FloatStrategy:
+    def __init__(self, min_value: float, max_value: float):
+        assert max_value >= min_value
+        self.min_value = float(min_value)
+        self.max_value = float(max_value)
+
+    def draw(self, rnd: random.Random) -> float:
+        return rnd.uniform(self.min_value, self.max_value)
+
+
+strategies = SimpleNamespace(
+    integers=lambda *, min_value, max_value:
+        _IntegerStrategy(min_value, max_value),
+    floats=lambda *, min_value, max_value, **_kw:
+        _FloatStrategy(min_value, max_value),
+)
+
+
+def settings(max_examples: int = 100, **_ignored):
+    """Record the example cap on the (already ``given``-wrapped) test."""
+
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        # the wrapper takes no parameters on purpose: pytest reads the
+        # signature for fixture injection, and the strategy arguments are
+        # supplied here, not by fixtures
+        def wrapper():
+            # @settings may sit above @given (attr lands on this wrapper)
+            # or below it (attr lands on the raw fn) — honour both orders
+            cap = getattr(wrapper, "_max_examples",
+                          getattr(fn, "_max_examples", 100))
+            cap = max(int(cap), 1)
+            cases = [tuple(s.min_value for s in strats),
+                     tuple(s.max_value for s in strats)]
+            rnd = random.Random(0)
+            while len(cases) < cap:
+                cases.append(tuple(s.draw(rnd) for s in strats))
+            for case in cases[:cap]:
+                try:
+                    fn(*case)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example {case!r}: {e}") from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+
+    return deco

@@ -1,9 +1,21 @@
 import os
 import sys
 
-# smoke tests and benches must see ONE device — the 512-device override is
-# strictly dryrun.py's business.
+# smoke tests and benches must see the CPU backend — the 512-device override
+# is strictly dryrun.py's business.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Give the in-process suite a small multi-device CPU topology so the dist
+# tests (compressed_psum under pmap, sharding annotations) exercise real
+# cross-device reduction instead of the 1-device degenerate case.  Must be
+# set before anything initializes the jax backend; honour an explicit
+# override (REPRO_TEST_CPU_DEVICES=1 restores the old single-device run).
+_N_DEV = os.environ.get("REPRO_TEST_CPU_DEVICES", "8")
+if ("--xla_force_host_platform_device_count"
+        not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_N_DEV}")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -14,3 +26,10 @@ import pytest  # noqa: E402
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture
+def cpu_devices():
+    """The host-platform device count (>= 1; 8 unless overridden above)."""
+    import jax
+    return jax.local_device_count()

@@ -1,7 +1,10 @@
 """CIM behavioral model: the ASIC's dual-bank arithmetic == TPU arithmetic."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:   # image without hypothesis: deterministic fallback
+    from _hypothesis_stub import given, settings, strategies as st
 
 from repro.core import cim
 

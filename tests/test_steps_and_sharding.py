@@ -54,6 +54,29 @@ def test_training_reduces_loss():
     assert losses[-1] < losses[0] - 0.3, losses[::8]
 
 
+def test_compressed_training_reduces_loss():
+    """The int8 error-feedback step trains: same smoke model as above,
+    gradient passed through the wire-format numerics each step."""
+    from repro.dist import compression as comp
+    arch = get_arch("tinyllama_1p1b")
+    cfg = arch.smoke.replace(dtype="float32")
+    opt_cfg = adamw.OptimizerConfig(peak_lr=2e-3, warmup_steps=5,
+                                    total_steps=60)
+    from repro.data.pipeline import DataConfig, batch_for_step
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=64, global_batch=8,
+                    seed=3)
+    params = st.init_params_fn(cfg)(jax.random.PRNGKey(0))
+    opt_state = adamw.init_state(params)
+    err = comp.init_error(params)
+    step = jax.jit(st.make_compressed_train_step(cfg, opt_cfg))
+    losses = []
+    for i in range(30):
+        params, opt_state, err, m = step(params, opt_state, err,
+                                         batch_for_step(dc, i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.2, losses[::6]
+
+
 def test_grad_accum_matches_big_batch():
     arch = get_arch("olmo_1b")
     cfg = arch.smoke.replace(dtype="float32")
@@ -71,7 +94,9 @@ def test_grad_accum_matches_big_batch():
         params, adamw.init_state(params), batch)
     d = max(float(jnp.max(jnp.abs(a - b)))
             for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
-    assert d < 5e-5, d
+    # f32 matmul-order noise only; the bound covers the slightly different
+    # XLA CPU codegen of single- vs multi-device builds (conftest forces 8)
+    assert d < 1e-4, d
 
 
 # ------------------------------- sharding -----------------------------------
@@ -125,6 +150,59 @@ def test_moe_expert_sharding_rules():
                                                   jnp.float32),
                              cfg, FakeMesh())
     assert spec == (None, None, "data", "model")
+
+
+def _tiny_mesh():
+    from jax.sharding import Mesh
+    if jax.local_device_count() < 8:
+        pytest.skip("needs 8 host-platform devices (conftest default)")
+    return Mesh(np.asarray(jax.devices()[:8]).reshape(2, 4),
+                ("data", "model"))
+
+
+def test_shard_is_identity_without_binding():
+    from repro.dist.sharding import current_axis_rules, shard
+    assert current_axis_rules() is None
+    x = jnp.ones((4, 8))
+    assert shard(x, "batch", "embed") is x
+
+
+def test_shard_applies_logical_rules_in_jit():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist.sharding import axis_rules, shard
+    from repro.launch.mesh import logical_rules
+    mesh = _tiny_mesh()
+    with axis_rules(mesh, logical_rules(mesh)):
+        y = jax.jit(lambda x: shard(x, "batch", "heads", None, None))(
+            jnp.ones((4, 8, 16, 4)))
+    assert y.sharding.is_equivalent_to(
+        NamedSharding(mesh, P("data", "model")), y.ndim)
+
+
+def test_shard_guards_divisibility_and_axis_reuse():
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist.sharding import axis_rules, shard
+    mesh = _tiny_mesh()
+    rules = {"batch": ("data",), "heads": "model", "mlp": "model"}
+    with axis_rules(mesh, rules):
+        # "mlp" would reuse the model axis -> replicated
+        y = jax.jit(lambda x: shard(x, "batch", "heads", "mlp"))(
+            jnp.ones((4, 8, 16)))
+        # 3 % data(2) != 0 -> batch dim replicated
+        z = jax.jit(lambda x: shard(x, "batch", None))(jnp.ones((3, 8)))
+    assert y.sharding.is_equivalent_to(
+        NamedSharding(mesh, P("data", "model", None)), y.ndim)
+    assert z.sharding.is_equivalent_to(NamedSharding(mesh, P()), z.ndim)
+
+
+def test_axis_rules_binding_restores_previous():
+    from repro.dist.sharding import axis_rules, current_axis_rules
+    mesh = _tiny_mesh()
+    with axis_rules(mesh, {"batch": "data"}):
+        with axis_rules(mesh, {"batch": None}):
+            assert current_axis_rules()[1] == {"batch": None}
+        assert current_axis_rules()[1] == {"batch": "data"}
+    assert current_axis_rules() is None
 
 
 DRYRUN_SNIPPET = """

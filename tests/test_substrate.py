@@ -156,17 +156,36 @@ def test_compressed_sgd_converges(rng):
     assert float(jnp.max(jnp.abs(w))) < 1e-2
 
 
-def test_compressed_psum_under_pmap_mean(rng):
-    """With one device the mean-reduce must equal plain dequantization."""
-    g = {"w": jnp.asarray(rng.normal(0, 1, (1, 32)), jnp.float32)}
-    err = {"w": jnp.zeros((1, 32))}
+def test_compressed_psum_under_pmap_mean(rng, cpu_devices):
+    """Mean-reduce over all local devices: each device quantizes its own
+    gradient, the all-gathered int8 payloads dequantize to the cross-device
+    mean within per-leaf quantization error."""
+    n = cpu_devices
+    g = {"w": jnp.asarray(rng.normal(0, 1, (n, 32)), jnp.float32)}
+    err = {"w": jnp.zeros((n, 32))}
 
     def f(g, e):
         return comp.compressed_psum(g, e, axis_name="dp")
 
-    red, _ = jax.pmap(f, axis_name="dp")(g, err)
-    # quantization error only
-    assert float(jnp.max(jnp.abs(red["w"] - g["w"]))) < 0.02
+    red, err2 = jax.pmap(f, axis_name="dp")(g, err)
+    want = jnp.mean(g["w"], axis=0)         # true (uncompressed) mean
+    # every replica holds the same reduced value ...
+    for i in range(n):
+        assert float(jnp.max(jnp.abs(red["w"][i] - want))) < 0.02
+    # ... and keeps its own local residual
+    assert err2["w"].shape == (n, 32)
+
+
+def test_compressed_psum_residual_matches_local_quant_error(rng):
+    """Under pmap the carried residual is the *local* quantization error."""
+    g = {"w": jnp.asarray(rng.normal(0, 1, (1, 16)), jnp.float32)}
+    err = {"w": jnp.asarray(rng.normal(0, 0.01, (1, 16)), jnp.float32)}
+    q, s, e2 = comp.compress(g, err)
+    _, e_pmap = jax.pmap(
+        lambda g, e: comp.compressed_psum(g, e, axis_name="dp"),
+        axis_name="dp")(g, err)
+    np.testing.assert_allclose(np.asarray(e_pmap["w"]), np.asarray(e2["w"]),
+                               rtol=1e-5, atol=1e-6)
 
 
 # ------------------------------ straggler -----------------------------------
