@@ -3,11 +3,16 @@
 # `make test` is the tier-1 gate (ROADMAP.md): a collect-only smoke step
 # first, so import-time breakage (a missing package, an API rename) fails in
 # seconds instead of surfacing mid-suite, then the full run.
+#
+# `make bench-json` regenerates the committed perf baselines
+# (benchmarks/BENCH_serve.json, benchmarks/BENCH_attention.json);
+# `make perf-check` is the perf gate — it reruns the serving benchmark and
+# fails on a >15% tok/s regression against the committed baseline.
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test collect kernels dist bench-smoke
+.PHONY: test collect kernels dist bench-smoke bench-json perf-check
 
 # fail fast on import/collection errors across every test module
 collect:
@@ -28,3 +33,13 @@ dist:
 # one cheap end-to-end lower on the 512-device host-only mesh
 bench-smoke:
 	$(PY) examples/multi_pod_lower.py --arch olmo_1b --shape decode_32k
+
+# regenerate the committed perf baselines (benchmarks/BENCH_*.json) on the
+# 8-CPU-device grid: paged-vs-dense serving under churn + kernel micro rows
+bench-json:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --json
+
+# perf gate: rerun the serving bench and fail on >15% tok/s regression
+# against the committed BENCH_serve.json (or if paged stops beating dense)
+perf-check:
+	PYTHONPATH=src:. $(PY) benchmarks/perf_check.py

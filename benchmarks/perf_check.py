@@ -1,0 +1,57 @@
+"""Perf regression gate: fresh BENCH_serve.json vs the committed baseline.
+
+``make perf-check`` runs this.  It re-runs the serving benchmark on the same
+grid as ``run.py --json`` and fails (exit 1) if tok/s regressed by more than
+``THRESHOLD`` against the committed ``benchmarks/BENCH_serve.json``, or if
+the paged scheduler no longer beats the dense baseline under churn — the
+property this whole subsystem exists to deliver.
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import sys
+
+THRESHOLD = 0.15          # fail on >15% tok/s regression
+BASELINE = pathlib.Path(__file__).parent / "BENCH_serve.json"
+
+
+def main() -> int:
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+    if not BASELINE.exists():
+        print(f"perf-check: no committed baseline at {BASELINE}; "
+              f"run `make bench-json` and commit it first")
+        return 1
+    base = json.loads(BASELINE.read_text())
+
+    from benchmarks import serve_bench
+    fresh = serve_bench.run_grid(**{
+        k: base["meta"][k] for k in
+        ("requests", "slots", "prompt_len", "gen", "block_k", "seed")})
+
+    failed = False
+    for kind in ("dense", "paged"):
+        b, f = base[kind]["tok_s"], fresh[kind]["tok_s"]
+        ratio = f / max(b, 1e-9)
+        status = "ok"
+        if ratio < 1.0 - THRESHOLD:
+            status, failed = "REGRESSION", True
+        print(f"perf-check [{kind}] tok/s: baseline {b:.1f} -> fresh "
+              f"{f:.1f} ({ratio:.2f}x)  {status}")
+    if fresh["paged_over_dense_tok_s"] <= 1.0:
+        print(f"perf-check: paged no longer beats dense under churn "
+              f"({fresh['paged_over_dense_tok_s']:.2f}x)  REGRESSION")
+        failed = True
+    else:
+        print(f"perf-check: paged/dense = "
+              f"{fresh['paged_over_dense_tok_s']:.2f}x  ok")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

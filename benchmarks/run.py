@@ -1,14 +1,56 @@
 """Benchmark harness: one section per paper table/figure.
 
-Prints ``name,value,derived`` CSV rows (value is us_per_call for timing
-benches, the metric itself for model-based benches).
+Default mode prints ``name,value,derived`` CSV rows (value is us_per_call
+for timing benches, the metric itself for model-based benches).
+
+``--json`` emits the tracked perf artifacts on the 8-CPU-device grid
+(set up before jax imports):
+
+  * ``benchmarks/BENCH_serve.json``     — paged vs dense serving under churn
+    (tok/s, p50/p99 decode-step latency, prefill counts, bytes moved)
+  * ``benchmarks/BENCH_attention.json`` — kernel microbenchmarks
+
+``make perf-check`` diffs a fresh run against the committed baselines.
 
   * energy_model      — Fig 8 / Fig 9 / Table I (TOPS/W, TOPS/mm2)
   * softmax_latency   — §V-B 33% split-softmax latency reduction
   * softmax_accuracy  — Fig 11 (float vs int8-LUT accuracy delta)
   * attention_bench   — kernel microbenchmarks (host wall-clock)
+  * serve_bench       — continuous-batching scheduler (json mode only)
 """
 import argparse
+import json
+import os
+import pathlib
+
+
+def _force_cpu_grid() -> None:
+    """8 host-platform devices, before any jax import."""
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+
+
+def run_json(out_dir: pathlib.Path) -> None:
+    _force_cpu_grid()
+    from benchmarks import attention_bench, serve_bench
+
+    serve_json = serve_bench.run_grid()
+    (out_dir / "BENCH_serve.json").write_text(
+        json.dumps(serve_json, indent=2) + "\n")
+    print(f"wrote {out_dir / 'BENCH_serve.json'}: "
+          f"dense {serve_json['dense']['tok_s']:.1f} tok/s, "
+          f"paged {serve_json['paged']['tok_s']:.1f} tok/s "
+          f"({serve_json['paged_over_dense_tok_s']:.2f}x)")
+
+    rows = attention_bench.run()
+    attn_json = {"rows": {name: {"us_per_call": val, "derived": derived}
+                          for name, val, derived in rows}}
+    (out_dir / "BENCH_attention.json").write_text(
+        json.dumps(attn_json, indent=2) + "\n")
+    print(f"wrote {out_dir / 'BENCH_attention.json'} ({len(rows)} rows)")
 
 
 def main() -> None:
@@ -16,7 +58,16 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: energy,latency,accuracy,attention")
     ap.add_argument("--accuracy-steps", type=int, default=120)
+    ap.add_argument("--json", action="store_true",
+                    help="emit benchmarks/BENCH_*.json on the 8-CPU grid")
+    ap.add_argument("--out-dir", default=str(pathlib.Path(__file__).parent),
+                    help="where --json writes the BENCH_*.json files")
     args = ap.parse_args()
+
+    if args.json:
+        run_json(pathlib.Path(args.out_dir))
+        return
+
     which = set(args.only.split(",")) if args.only else {
         "energy", "latency", "accuracy", "attention"}
 

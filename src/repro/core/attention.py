@@ -143,3 +143,35 @@ def decode_attention(q: jax.Array, k_cache_q: jax.Array, v_cache_q: jax.Array,
         window=spec.window, block_k=spec.block_k, lut_mode=spec.lut_mode,
         exact_recip=spec.exact_recip, impl=spec.impl)
     return out.astype(in_dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_table: jax.Array,
+                           s_k: jax.Array, s_v: jax.Array,
+                           cache_len: jax.Array, spec: AttentionSpec
+                           ) -> jax.Array:
+    """(B,Hq,D) query vs a paged int8 pool addressed by a block table.
+
+    Pool layout is ``(num_blocks, Hkv, block_k, D)`` with per-slot rows
+    ``block_table (B, max_blocks)`` (see :mod:`repro.core.paged_kv`).  The
+    int8 path gathers K/V tiles through the table inside the Pallas kernel;
+    float/fakequant baselines materialize the gather and reuse
+    :func:`decode_attention`, so all modes see identical cache contents.
+    """
+    in_dtype = q.dtype
+    if spec.mode in ("float", "fakequant"):
+        from repro.core import paged_kv
+        k_cache_q = paged_kv.gather_kv(k_pages, block_table)
+        v_cache_q = paged_kv.gather_kv(v_pages, block_table)
+        return decode_attention(q, k_cache_q, v_cache_q, s_k, s_v,
+                                cache_len, spec)
+
+    assert spec.mode == "int8", spec.mode
+    s_q = jax.lax.stop_gradient(qlib.absmax_scale(q))
+    exp_lut, recip_lut = _luts_for(spec.scale_z)
+    out = ops.splitmax_decode_paged(
+        qlib.quantize(q, s_q), k_pages, v_pages, block_table,
+        s_q, s_k, s_v, cache_len, exp_lut, recip_lut, cfg=spec.lut_config,
+        window=spec.window, lut_mode=spec.lut_mode,
+        exact_recip=spec.exact_recip, impl=spec.impl)
+    return out.astype(in_dtype)

@@ -1,0 +1,154 @@
+"""Paged int8 KV block pool: storage layout, block-table gather, allocator.
+
+CIMple keeps K/V resident in int8 inside the CIM array; at serving scale the
+limiting resource is *cache occupancy*, not compute.  A dense ``(slots,
+max_len)`` cache wastes a full sequence worth of rows per slot and forces the
+scheduler to re-prefill the whole batch whenever one slot turns over.  This
+module provides the paged alternative (the classic vLLM / ``KvBlockStorage``
+design): the cache is a pool of fixed-size int8 blocks
+
+    k_pages / v_pages : (num_blocks, Hkv, block_k, head_dim)  int8
+
+and each slot owns an ordered list of block ids — its *block table* row
+
+    block_table : (slots, blocks_per_slot)  int32
+
+so logical position ``p`` of slot ``s`` lives at
+``pages[block_table[s, p // block_k], :, p % block_k, :]``.  Blocks are
+``block_k``-aligned to the decode kernel's k-tile, so the kernel gathers K/V
+*through the table* with its BlockSpec index map — no contiguous K/V is ever
+materialized in HBM on the kernel path (FusionCIM's fused-gather argument).
+
+Block id 0 is reserved as a **trash block**: freed slots point their whole
+table row at it, so a retired slot that keeps stepping (the batch shape is
+static) scribbles harmlessly into block 0 instead of corrupting a recycled
+block.
+
+The :class:`BlockAllocator` is deliberately host-side and pure-Python — block
+turnover is a scheduler decision made between device steps, and keeping it
+out of the jitted graph means admission never retraces.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+TRASH_BLOCK = 0
+
+
+class BlockAllocationError(RuntimeError):
+    """Pool exhausted, double free, or free of an unallocated block."""
+
+
+class BlockAllocator:
+    """Free-list allocator over ``num_blocks`` block ids.
+
+    Reserved ids (by default the trash block) are never handed out.  Frees
+    recycle ids FIFO so the pool wears evenly; invariants (no double free,
+    no foreign ids, exhaustion) raise :class:`BlockAllocationError` loudly
+    rather than corrupting another request's cache.
+    """
+
+    def __init__(self, num_blocks: int,
+                 reserved: Sequence[int] = (TRASH_BLOCK,)):
+        if num_blocks <= len(set(reserved)):
+            raise ValueError(f"pool of {num_blocks} blocks has no "
+                             f"allocatable ids (reserved: {reserved})")
+        self.num_blocks = num_blocks
+        self._reserved = frozenset(reserved)
+        self._free = deque(i for i in range(num_blocks)
+                           if i not in self._reserved)
+        self._live: set = set()
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_count(self) -> int:
+        return len(self._live)
+
+    def alloc(self, n: int) -> List[int]:
+        """Allocate ``n`` block ids; all-or-nothing."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            raise BlockAllocationError(
+                f"requested {n} blocks, only {len(self._free)} free "
+                f"({len(self._live)} live of {self.num_blocks})")
+        ids = [self._free.popleft() for _ in range(n)]
+        self._live.update(ids)
+        return ids
+
+    def free(self, ids: Iterable[int]) -> None:
+        """Return blocks to the pool; rejects double frees and foreign ids."""
+        ids = list(ids)
+        for i in ids:
+            if i in self._reserved:
+                raise BlockAllocationError(f"freeing reserved block {i}")
+            if i not in self._live:
+                raise BlockAllocationError(
+                    f"freeing block {i} that is not allocated "
+                    f"(double free or foreign id)")
+        for i in ids:
+            self._live.discard(i)
+            self._free.append(i)
+
+
+# ---------------------------------------------------------------------------
+# pool construction / addressing helpers (device side, functional)
+# ---------------------------------------------------------------------------
+
+def blocks_per_seq(max_len: int, block_k: int) -> int:
+    """Table width needed to hold ``max_len`` positions."""
+    return -(-max_len // block_k)
+
+
+def init_kv_pages(n_layers: int, num_blocks: int, n_kv_heads: int,
+                  block_k: int, head_dim: int, slots: int,
+                  blocks_per_slot: int) -> Dict[str, jax.Array]:
+    """Zero-initialized paged pool + all-trash block table.
+
+    Layout note: the block dim is *outside* the head dim so one (block, head)
+    pair is a contiguous (block_k, head_dim) int8 tile — exactly the decode
+    kernel's k-tile, which is what lets the BlockSpec index map address the
+    pool directly with table entries.
+    """
+    shape = (n_layers, num_blocks, n_kv_heads, block_k, head_dim)
+    return {
+        "k_pages": jnp.zeros(shape, jnp.int8),
+        "v_pages": jnp.zeros(shape, jnp.int8),
+        "scale_k": jnp.full((n_layers, 1, 1, 1, 1), 1e-2, jnp.float32),
+        "scale_v": jnp.full((n_layers, 1, 1, 1, 1), 1e-2, jnp.float32),
+        "block_table": jnp.full((slots, blocks_per_slot), TRASH_BLOCK,
+                                jnp.int32),
+        "length": jnp.zeros((slots,), jnp.int32),
+    }
+
+
+def gather_kv(pages: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Materialize contiguous K or V through the table (non-kernel paths).
+
+    pages (num_blocks, H, block_k, d) x table (B, mb) -> (B, H, mb*block_k, d).
+    The Pallas decode kernel never calls this — it gathers tile-by-tile via
+    its index map; this is the XLA/ref fallback and the oracle for tests.
+    """
+    b, mb = block_table.shape
+    _, h, bk, d = pages.shape
+    g = pages[block_table]                       # (B, mb, H, bk, d)
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, h, mb * bk, d)
+
+
+def release_slot(pool: Dict[str, jax.Array], slot: int
+                 ) -> Dict[str, jax.Array]:
+    """Point a retired slot's table row at the trash block and zero its
+    length.  The slot keeps decoding (static batch shape) but every write
+    lands in block 0; the allocator recycles the real blocks separately."""
+    return dict(
+        pool,
+        block_table=pool["block_table"].at[slot].set(TRASH_BLOCK),
+        length=pool["length"].at[slot].set(0),
+    )

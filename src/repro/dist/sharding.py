@@ -28,8 +28,12 @@ Two layers live here:
    Rules are path-pattern based so they apply uniformly to stacked (scanned)
    layer parameters: stacking only prepends layer axes, which get ``None``.
 
-This module migrated from ``repro.launch.sharding``; that name remains a
-deprecation shim.
+Axis names are never hard-wired at use sites: path-pattern rules name
+*logical* state axes (``fsdp``, ``tensor``, ``expert``, ``cache_batch``,
+``cache_seq``, ``cache_inner``, ``cache_block``) which
+:data:`DEFAULT_STATE_RULES` binds to mesh axes — the same mechanism
+``axis_rules`` gives activations, so a launcher can rebind everything in one
+place.
 """
 from __future__ import annotations
 
@@ -147,31 +151,76 @@ def path_str(path) -> str:
     return "/".join(parts)
 
 
-# (path regex, spec for the *trailing* (unstacked) dims)
-# "F" = fsdp axis ("data"), "T" = tensor axis ("model")
+# Logical state-axis names -> mesh axes: the same rules mechanism
+# ``axis_rules`` gives activations, extended to params / optimizer moments /
+# decode caches.  ``param_shardings`` and ``cache_shardings`` consult this
+# mapping (overridable per call via ``rules=``) instead of hard-wiring mesh
+# axis names into the path patterns; "dp" is a virtual binding resolved
+# through :func:`batch_axes` (``("pod", "data")`` on multi-pod meshes).
+DEFAULT_STATE_RULES: Dict[str, AxisBinding] = {
+    "fsdp": "data",          # ZeRO-3 dim of every weight / moment
+    "tensor": "model",       # TP dim (heads, ffn inner, vocab)
+    "expert": "model",       # EP dim of stacked expert weights
+    "cache_batch": "dp",     # decode-cache batch/slot dim
+    "cache_seq": "model",    # dense KV sequence dim (context parallelism)
+    "cache_inner": "model",  # SSM state inner (channels / heads) dim
+    "cache_block": None,     # paged pool block dim: replicated — block ids
+                             # are global, the host allocator owns them
+}
+
+
+# (path regex, *logical* axis names for the trailing (unstacked) dims)
 _RULES = [
-    (r"embed/table(_q)?$", ("T", "F")),             # vocab x d_model
-    (r"lm_head/w(_q)?$", ("F", "T")),               # d_model x vocab
-    (r"(wq|wk|wv)/w(_q)?$", ("F", "T")),            # d_in x (heads*hd)
-    (r"wo/w(_q)?$", ("T", "F")),                    # (heads*hd) x d_model
-    (r"(w_in|w_gate)/w(_q)?$", ("F", "T")),         # d x d_ff
-    (r"w_out/w(_q)?$", ("T", "F")),                 # d_ff x d
-    (r"router/w(_q)?$", ("F", None)),               # d x n_experts
-    (r"moe/w_in$", ("E", "F", "T")),           # stacked expert weights
-    (r"moe/w_gate$", ("E", "F", "T")),
-    (r"moe/w_out$", ("E", "T", "F")),
-    (r"in_proj/w(_q)?$", ("F", "T")),               # mamba d x inner-ish
-    (r"out_proj/w(_q)?$", ("T", "F")),
-    (r"x_proj/w(_q)?$", ("T", None)),               # di x (dt_rank + 2n)
-    (r"dt_proj/w(_q)?$", (None, "T")),
-    (r"conv_w$", (None, "T")),                 # (K, channels)
-    (r"ssm/A_log$", ("T", None)),              # mamba1 (di, N); mamba2 (H,)
-    (r"ssm/D$", ("T",)),                       # mamba1 (di,); mamba2 (H,)
+    (r"embed/table(_q)?$", ("tensor", "fsdp")),     # vocab x d_model
+    (r"lm_head/w(_q)?$", ("fsdp", "tensor")),       # d_model x vocab
+    (r"(wq|wk|wv)/w(_q)?$", ("fsdp", "tensor")),    # d_in x (heads*hd)
+    (r"wo/w(_q)?$", ("tensor", "fsdp")),            # (heads*hd) x d_model
+    (r"(w_in|w_gate)/w(_q)?$", ("fsdp", "tensor")),  # d x d_ff
+    (r"w_out/w(_q)?$", ("tensor", "fsdp")),         # d_ff x d
+    (r"router/w(_q)?$", ("fsdp", None)),            # d x n_experts
+    (r"moe/w_in$", ("expert", "fsdp", "tensor")),   # stacked expert weights
+    (r"moe/w_gate$", ("expert", "fsdp", "tensor")),
+    (r"moe/w_out$", ("expert", "tensor", "fsdp")),
+    (r"in_proj/w(_q)?$", ("fsdp", "tensor")),       # mamba d x inner-ish
+    (r"out_proj/w(_q)?$", ("tensor", "fsdp")),
+    (r"x_proj/w(_q)?$", ("tensor", None)),          # di x (dt_rank + 2n)
+    (r"dt_proj/w(_q)?$", (None, "tensor")),
+    (r"conv_w$", (None, "tensor")),            # (K, channels)
+    (r"ssm/A_log$", ("tensor", None)),         # mamba1 (di, N); mamba2 (H,)
+    (r"ssm/D$", ("tensor",)),                  # mamba1 (di,); mamba2 (H,)
 ]
 
 
-def _trailing_spec(path: str, leaf, cfg: ModelConfig, mesh: Mesh
+def _resolve(name: Optional[str], mesh: Mesh,
+             rules: Dict[str, AxisBinding]) -> Tuple[str, ...]:
+    """Logical state-axis name -> tuple of live mesh axes (maybe empty)."""
+    if name is None:
+        return ()
+    binding = rules.get(name)
+    if binding == "dp":
+        binding = batch_axes(mesh)
+    return tuple(a for a in _mesh_axes_of(binding) if a in mesh.shape)
+
+
+def _guarded(dim: int, name: Optional[str], mesh: Mesh,
+             rules: Dict[str, AxisBinding]):
+    """Resolve + divisibility guard: largest prefix of the bound mesh axes
+    that divides ``dim`` (so smoke shapes replicate instead of erroring)."""
+    axes = _resolve(name, mesh, rules)
+    while axes:
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if dim % n == 0:
+            return axes[0] if len(axes) == 1 else axes
+        axes = axes[1:]
+    return None
+
+
+def _trailing_spec(path: str, leaf, cfg: ModelConfig, mesh: Mesh,
+                   rules: Optional[Dict[str, AxisBinding]] = None
                    ) -> Tuple[Optional[str], ...]:
+    rules = DEFAULT_STATE_RULES if rules is None else rules
     tdims = None
     for pat, spec in _RULES:
         if re.search(pat, path):
@@ -180,57 +229,63 @@ def _trailing_spec(path: str, leaf, cfg: ModelConfig, mesh: Mesh
     if tdims is None:
         return (None,) * leaf.ndim
     axes = []
-    msize = mesh.shape["model"]
-    fsize = mesh.shape["data"]
     for d in tdims:
-        if d == "F":
-            axes.append("data")
-        elif d == "T":
-            axes.append("model")
-        elif d == "E":
-            # expert dim: EP over model when divisible, else replicate the
-            # expert dim (TP inside experts still applies via F/T dims)
+        if d == "expert":
+            # expert dim: EP when the mesh divides n_experts, else replicate
+            # (TP inside experts still applies via the fsdp/tensor dims)
             n_e = cfg.moe.n_experts if cfg.moe else 0
-            axes.append("model" if n_e and n_e % msize == 0 else None)
+            axes.append(_guarded(n_e, d, mesh, rules) if n_e else None)
         else:
-            axes.append(None)
+            resolved = _resolve(d, mesh, rules)
+            axes.append(resolved[0] if len(resolved) == 1
+                        else (resolved or None))
     # special cases: mamba1 A_log/D are 2D/1D with di leading (handled above);
     # 1D leaves fall through to replicate
     n_lead = leaf.ndim - len(axes)
     if n_lead < 0:
         return (None,) * leaf.ndim
     spec = [None] * n_lead + axes
-    # EP + TP conflict: if expert dim took "model", inner dims must not
-    if "model" in spec[n_lead:] and spec.count("model") > 1:
-        seen = False
-        for i, a in enumerate(spec):
-            if a == "model":
-                if seen:
-                    spec[i] = None
-                seen = True
-    # divisibility guard: replicate any dim the mesh does not divide
-    sizes = {"data": fsize, "model": msize}
+    # EP + TP conflict: a mesh axis may appear at most once per leaf
+    used: set = set()
     for i, a in enumerate(spec):
-        if a is not None and leaf.shape[i] % sizes[a] != 0:
+        for ax in _mesh_axes_of(a):
+            if ax in used:
+                spec[i] = None
+                break
+        used.update(_mesh_axes_of(spec[i]))
+    # divisibility guard: replicate any dim the mesh does not divide
+    for i, a in enumerate(spec):
+        if a is None:
+            continue
+        n = 1
+        for ax in _mesh_axes_of(a):
+            n *= mesh.shape[ax]
+        if leaf.shape[i] % n != 0:
             spec[i] = None
     return tuple(spec)
 
 
 def param_shardings(params_shape: Any, cfg: ModelConfig, mesh: Mesh,
-                    fsdp: bool = True) -> Any:
+                    fsdp: bool = True,
+                    rules: Optional[Dict[str, AxisBinding]] = None) -> Any:
     """Pytree of NamedShardings matching ``params_shape`` (shapes or arrays).
 
-    ``fsdp=False`` (serve-time TP-only mode): the "data" factor of every
-    weight spec is dropped, so weights are resident TP shards and no
-    per-step FSDP all-gather is needed — decode steps become gather-free at
-    the cost of replicating each TP shard across the data axis (requires
-    bf16/int8 params for the big architectures to fit HBM).
+    Optimizer moments are params-shaped, so these specs cover them too.
+    ``rules`` rebinds the logical state axes (default
+    :data:`DEFAULT_STATE_RULES`).  ``fsdp=False`` (serve-time TP-only mode):
+    the fsdp factor of every weight spec is dropped, so weights are resident
+    TP shards and no per-step FSDP all-gather is needed — decode steps
+    become gather-free at the cost of replicating each TP shard across the
+    data axis (requires bf16/int8 params for the big architectures to fit
+    HBM).
     """
+    rules = DEFAULT_STATE_RULES if rules is None else rules
+    fsdp_axes = set(_resolve("fsdp", mesh, rules))
 
     def one(path, leaf):
-        spec = _trailing_spec(path_str(path), leaf, cfg, mesh)
+        spec = _trailing_spec(path_str(path), leaf, cfg, mesh, rules)
         if not fsdp:
-            spec = tuple(None if a == "data" else a for a in spec)
+            spec = tuple(None if a in fsdp_axes else a for a in spec)
         return NamedSharding(mesh, P(*spec))
 
     return jax.tree_util.tree_map_with_path(one, params_shape)
@@ -242,15 +297,7 @@ def replicated(mesh: Mesh) -> NamedSharding:
 
 def _dp_for(batch_dim: int, mesh: Mesh):
     """Largest prefix of DP axes that divides the batch (b=1 -> replicate)."""
-    dp = batch_axes(mesh)
-    while dp:
-        n = 1
-        for a in dp:
-            n *= mesh.shape[a]
-        if batch_dim % n == 0:
-            return dp
-        dp = dp[1:]
-    return None
+    return _guarded(batch_dim, "cache_batch", mesh, DEFAULT_STATE_RULES)
 
 
 def batch_shardings(batch_shape: Any, mesh: Mesh) -> Any:
@@ -264,39 +311,51 @@ def batch_shardings(batch_shape: Any, mesh: Mesh) -> Any:
     return jax.tree.map(one, batch_shape)
 
 
-def cache_shardings(cache_shape: Any, cfg: ModelConfig, mesh: Mesh) -> Any:
-    """Decode caches.
+def cache_shardings(cache_shape: Any, cfg: ModelConfig, mesh: Mesh,
+                    rules: Optional[Dict[str, AxisBinding]] = None) -> Any:
+    """Decode caches, bound through the logical state-axis rules.
 
-    KV tensors (L, B, Hkv, S, hd): batch over DP, sequence over ``model``
-    (context parallelism).  SSM states (L, B, ...): batch over DP, inner
-    (d_inner / heads) dim over ``model``.  Scalars/lengths replicate.
+    Dense KV tensors (L, B, Hkv, S, hd): batch over ``cache_batch``,
+    sequence over ``cache_seq`` (context parallelism — split softmax is
+    associative over keys).  Paged pools (L, num_blocks, Hkv, block_k, hd):
+    block dim over ``cache_block`` (replicated by default — block ids are
+    global, the host free-list owns them), block tables batch over
+    ``cache_batch``.  SSM states (L, B, ...): batch over ``cache_batch``,
+    inner (d_inner / heads) dim over ``cache_inner``.  Scalars/lengths
+    follow the batch; scale tensors replicate.
     """
-    msize = mesh.shape["model"]
+    rules = DEFAULT_STATE_RULES if rules is None else rules
+
+    def g(dim, name):
+        return _guarded(dim, name, mesh, rules)
 
     def one(path, leaf):
         key = path_str(path)
+        if leaf.ndim == 5 and ("k_pages" in key or "v_pages" in key):
+            return NamedSharding(
+                mesh, P(None, g(leaf.shape[1], "cache_block"),
+                        None, None, None))
         if leaf.ndim == 5 and ("k_q" in key or "v_q" in key
                                or "cross_k" in key or "cross_v" in key):
-            dp = _dp_for(leaf.shape[1], mesh)
-            seq_ok = leaf.shape[3] % msize == 0
-            return NamedSharding(mesh, P(None, dp,
-                                         None, "model" if seq_ok else None,
-                                         None))
+            return NamedSharding(
+                mesh, P(None, g(leaf.shape[1], "cache_batch"),
+                        None, g(leaf.shape[3], "cache_seq"), None))
+        if "block_table" in key:
+            return NamedSharding(
+                mesh, P(g(leaf.shape[0], "cache_batch"), None))
         if "ssm/conv" in key or ("conv" in key and leaf.ndim == 4):
-            # (L, B, K-1, C): channels over model
-            dp = _dp_for(leaf.shape[1], mesh)
-            ok = leaf.shape[-1] % msize == 0
-            return NamedSharding(mesh, P(None, dp, None,
-                                         "model" if ok else None))
+            # (L, B, K-1, C): channels over cache_inner
+            return NamedSharding(
+                mesh, P(None, g(leaf.shape[1], "cache_batch"), None,
+                        g(leaf.shape[-1], "cache_inner")))
         if "ssm/h" in key or ("/h" in key and leaf.ndim >= 4):
-            # mamba1 (L,B,di,N) / mamba2 (L,B,H,N,P): inner dim over model
-            dp = _dp_for(leaf.shape[1], mesh)
-            ok = leaf.shape[2] % msize == 0
-            spec = [None, dp, "model" if ok else None] + [None] * (
+            # mamba1 (L,B,di,N) / mamba2 (L,B,H,N,P): inner over cache_inner
+            spec = [None, g(leaf.shape[1], "cache_batch"),
+                    g(leaf.shape[2], "cache_inner")] + [None] * (
                 leaf.ndim - 3)
             return NamedSharding(mesh, P(*spec))
         if leaf.ndim == 1 and "length" in key:
-            return NamedSharding(mesh, P(_dp_for(leaf.shape[0], mesh)))
+            return NamedSharding(mesh, P(g(leaf.shape[0], "cache_batch")))
         if leaf.ndim == 5:  # scale tensors (L,1,1,1,1)
             return NamedSharding(mesh, P(None, None, None, None, None))
         return NamedSharding(mesh, P(*([None] * leaf.ndim)))

@@ -22,12 +22,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import lut as lut_lib
+from repro.core import paged_kv
 from repro.core.lut import LUTConfig
 from repro.kernels import blocked as blocked_lib
 from repro.kernels import ref as ref_lib
 from repro.kernels.int8_matmul import int8_matmul_pallas
 from repro.kernels.splitmax_attn import splitmax_attention_pallas
-from repro.kernels.splitmax_decode import splitmax_decode_pallas
+from repro.kernels.splitmax_decode import (splitmax_decode_paged_pallas,
+                                           splitmax_decode_pallas)
 
 
 def _on_tpu() -> bool:
@@ -118,6 +120,43 @@ def splitmax_decode(
     return splitmax_decode_pallas(
         q_q, k_cache, v_cache, m_z, s_v, cache_len, exp_lut, recip_lut,
         cfg=cfg, window=window, block_k=block_k, lut_mode=lut_mode,
+        exact_recip=exact_recip, interpret=(impl == "interpret"))
+
+
+def splitmax_decode_paged(
+    q_q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+    block_table: jax.Array,
+    s_q: jax.Array, s_k: jax.Array, s_v: jax.Array,
+    cache_len: jax.Array,
+    exp_lut: jax.Array, recip_lut: jax.Array,
+    *,
+    cfg: LUTConfig,
+    window: Optional[int] = None,
+    lut_mode: str = "onehot",
+    exact_recip: bool = False,
+    impl: str = "auto",
+) -> jax.Array:
+    """(B,Hq,D) int8 x paged int8 pool + (B,mb) block table -> (B,Hq,D) f32.
+
+    The Pallas path gathers K/V tiles through the table inside the kernel's
+    index map; the XLA/ref fallbacks materialize contiguous K/V with
+    :func:`repro.core.paged_kv.gather_kv` first and then reuse the dense
+    decode — same numerics, so the paged and dense paths bit-match.
+    """
+    impl = _resolve(impl)
+    if impl in ("ref", "xla"):
+        k_cache = paged_kv.gather_kv(k_pages, block_table)
+        v_cache = paged_kv.gather_kv(v_pages, block_table)
+        fn = (ref_lib.splitmax_decode_ref if impl == "ref"
+              else blocked_lib.grouped_splitmax_decode)
+        return fn(q_q, k_cache, v_cache, s_q, s_k, s_v, cache_len, cfg,
+                  exp_lut, recip_lut, window=window, exact_recip=exact_recip)
+    d = q_q.shape[-1]
+    m_z = (s_q * s_k / (jnp.sqrt(jnp.float32(d)) * cfg.scale_z)
+           ).astype(jnp.float32)
+    return splitmax_decode_paged_pallas(
+        q_q, k_pages, v_pages, block_table, m_z, s_v, cache_len,
+        exp_lut, recip_lut, cfg=cfg, window=window, lut_mode=lut_mode,
         exact_recip=exact_recip, interpret=(impl == "interpret"))
 
 

@@ -19,6 +19,17 @@ of the q tile, so one kernel instance serves a (batch, kv-head) pair:
 
 Per-batch valid cache lengths arrive via scalar prefetch (SMEM), giving the
 ragged masking a real serving system needs.
+
+Two cache layouts share the kernel math:
+
+  * dense  — K/V per batch row are contiguous ``(B, Hkv, S_max, D)``; the
+    k-tile index map is the identity walk ``ki -> ki``.
+  * paged  — K/V live in a block pool ``(num_blocks, Hkv, block_k, D)`` and a
+    per-slot block table ``(B, max_blocks)`` (scalar-prefetched alongside the
+    lengths) names each slot's tiles.  The BlockSpec index map reads the
+    table, so the gather happens *inside the DMA engine* — contiguous K/V is
+    never materialized in HBM, mirroring how the CIM array reads whichever
+    bank the row decoder selects.
 """
 from __future__ import annotations
 
@@ -35,6 +46,48 @@ from repro.kernels.pallas_compat import tpu_compiler_params
 from repro.core.lut import LUTConfig
 from repro.kernels.splitmax_attn import (_onehot_lookup, _recip_lut_inline,
                                          _replicate_table)
+
+
+def _accumulate_tile(q, k, v, *, m_z, cache_len, k_start, window, windowed,
+                     acc_ref, s_ref, exp_ref, cfg: LUTConfig, g_pad: int,
+                     block_k: int, lut_mode: str):
+    """One k-tile of the split-softmax accumulation (shared dense/paged).
+
+    q (G_pad, D) int8-as-int32, k/v (block_k, D) int8 tiles; ``k_start`` is
+    the tile's absolute position in the slot's logical sequence (for paged
+    caches that is the *table* position, not the pool position).
+    """
+    z32 = jax.lax.dot_general(q, k.astype(jnp.int32),
+                              (((1,), (1,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    z_q = jnp.clip(jnp.round(z32.astype(jnp.float32) * m_z),
+                   -128, 127).astype(jnp.int32)
+    if lut_mode == "onehot":
+        e = _onehot_lookup(z_q + 128, exp_ref)
+    else:
+        e = jnp.round(jnp.exp((z_q - 127).astype(jnp.float32)
+                              * cfg.scale_z) * (1 << cfg.exp_frac_bits))
+    cols = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                              (g_pad, block_k), 1)
+    mask = cols < cache_len
+    if windowed:
+        mask &= cols > cache_len - 1 - window
+    e = jnp.where(mask, e, 0.0)
+    acc_ref[...] += jax.lax.dot_general(
+        e, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    s_ref[:, :1] += jnp.sum(e, axis=1, keepdims=True)
+
+
+def _finalize_tile(out_ref, acc_ref, s_ref, recip_ref, *, s_v,
+                   cfg: LUTConfig, exact_recip: bool):
+    """Reciprocal-LUT epilogue, applied once at the last k-tile."""
+    s = jnp.maximum(s_ref[:, :1], 1.0)
+    if exact_recip:
+        r = 1.0 / s
+    else:
+        r = _recip_lut_inline(s, recip_ref, cfg)
+    out_ref[0] = acc_ref[...] * r * s_v
 
 
 def _decode_kernel(
@@ -83,36 +136,81 @@ def _decode_kernel(
 
     @pl.when(live)
     def _compute():
-        q = q_ref[0].astype(jnp.int32)                      # (G, D)
-        k = k_ref[0].astype(jnp.int32)                      # (bk, D)
-        z32 = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                  preferred_element_type=jnp.int32)
-        z_q = jnp.clip(jnp.round(z32.astype(jnp.float32) * m_z),
-                       -128, 127).astype(jnp.int32)
-        if lut_mode == "onehot":
-            e = _onehot_lookup(z_q + 128, exp_ref)
-        else:
-            e = jnp.round(jnp.exp((z_q - 127).astype(jnp.float32)
-                                  * cfg.scale_z) * (1 << cfg.exp_frac_bits))
-        cols = k_start + jax.lax.broadcasted_iota(jnp.int32,
-                                                  (g_pad, block_k), 1)
-        mask = cols < cache_len
-        if windowed:
-            mask &= cols > cache_len - 1 - window
-        e = jnp.where(mask, e, 0.0)
-        acc_ref[...] += jax.lax.dot_general(
-            e, v_ref[0].astype(jnp.float32), (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)
-        s_ref[:, :1] += jnp.sum(e, axis=1, keepdims=True)
+        _accumulate_tile(
+            q_ref[0].astype(jnp.int32), k_ref[0], v_ref[0],
+            m_z=m_z, cache_len=cache_len, k_start=k_start, window=window,
+            windowed=windowed, acc_ref=acc_ref, s_ref=s_ref, exp_ref=exp_ref,
+            cfg=cfg, g_pad=g_pad, block_k=block_k, lut_mode=lut_mode)
 
     @pl.when(ki == num_k_blocks - 1)
     def _finalize():
-        s = jnp.maximum(s_ref[:, :1], 1.0)
-        if exact_recip:
-            r = 1.0 / s
-        else:
-            r = _recip_lut_inline(s, recip_ref, cfg)
-        out_ref[0] = acc_ref[...] * r * s_v
+        _finalize_tile(out_ref, acc_ref, s_ref, recip_ref, s_v=s_v,
+                       cfg=cfg, exact_recip=exact_recip)
+
+
+def _paged_decode_kernel(
+    # scalar prefetch
+    lens_ref,               # SMEM (B,) int32 — valid length per slot
+    table_ref,              # SMEM (B, max_blocks) int32 — block table
+    scalars_ref,            # SMEM (4,) f32 — [m_z, s_v, window, unused]
+    # inputs
+    q_ref,                  # (1, G_pad, D) int8
+    k_ref,                  # (1, 1, block_k, D) int8 — pool tile via table
+    v_ref,                  # (1, 1, block_k, D) int8
+    exp_ref, recip_ref,     # (256, 128) f32
+    # output
+    out_ref,                # (1, G_pad, D) f32
+    # scratch
+    acc_ref,                # (G_pad, D) f32
+    s_ref,                  # (G_pad, 128) f32
+    *,
+    cfg: LUTConfig,
+    hkv: int,
+    block_k: int,
+    num_k_blocks: int,
+    g_pad: int,
+    windowed: bool,
+    lut_mode: str,
+    exact_recip: bool,
+):
+    """Block-table decode: identical math to :func:`_decode_kernel`; the only
+    difference is that the k/v tiles were fetched *through the table* by the
+    BlockSpec index map (see ``splitmax_decode_paged_pallas``), so ``ki`` is
+    a logical (table) position while the tile bytes come from wherever in the
+    pool that slot's ``ki``-th block lives."""
+    bh = pl.program_id(0)
+    ki = pl.program_id(1)
+    b = bh // hkv
+    del table_ref  # consumed by the index maps, not the body
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    m_z = scalars_ref[0]
+    s_v = scalars_ref[1]
+    window = scalars_ref[2].astype(jnp.int32)
+    cache_len = lens_ref[b]
+    k_start = ki * block_k
+
+    live = k_start < cache_len
+    if windowed:
+        live = jnp.logical_and(live,
+                               k_start + block_k - 1 >= cache_len - window)
+
+    @pl.when(live)
+    def _compute():
+        _accumulate_tile(
+            q_ref[0].astype(jnp.int32), k_ref[0, 0], v_ref[0, 0],
+            m_z=m_z, cache_len=cache_len, k_start=k_start, window=window,
+            windowed=windowed, acc_ref=acc_ref, s_ref=s_ref, exp_ref=exp_ref,
+            cfg=cfg, g_pad=g_pad, block_k=block_k, lut_mode=lut_mode)
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        _finalize_tile(out_ref, acc_ref, s_ref, recip_ref, s_v=s_v,
+                       cfg=cfg, exact_recip=exact_recip)
 
 
 @functools.partial(
@@ -190,6 +288,94 @@ def splitmax_decode_pallas(
         interpret=interpret,
     )(cache_len.astype(jnp.int32), scalars, qf, kf, vf,
       _replicate_table(exp_lut), _replicate_table(recip_lut))
+
+    out = out.reshape(b, hkv, g_pad, d)[:, :, :group, :]
+    return out.reshape(b, hq, d)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "window", "lut_mode", "exact_recip", "interpret"))
+def splitmax_decode_paged_pallas(
+    q_q: jax.Array,            # (B, Hq, D) int8 — one new token per slot
+    k_pages: jax.Array,        # (num_blocks, Hkv, block_k, D) int8 pool
+    v_pages: jax.Array,        # (num_blocks, Hkv, block_k, D) int8 pool
+    block_table: jax.Array,    # (B, max_blocks) int32 — per-slot block ids
+    m_z: jax.Array,            # scalar f32
+    s_v: jax.Array,            # scalar f32
+    cache_len: jax.Array,      # (B,) int32 — valid entries incl. current token
+    exp_lut: jax.Array,        # (256,) int32
+    recip_lut: jax.Array,      # (256,) int32
+    *,
+    cfg: LUTConfig,
+    window: Optional[int] = None,
+    lut_mode: str = "onehot",
+    exact_recip: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns (B, Hq, D) float32 — decode attention gathered through the
+    block table.
+
+    The per-slot block indices ride in scalar prefetch next to ``lens_ref``;
+    the K/V BlockSpec index maps read them, so each grid step DMAs exactly
+    the pool tile the table names.  Tiles are (block_k, D) by construction
+    (blocks are block_k-aligned), hence grid position ``ki`` maps 1:1 to the
+    slot's ``ki``-th logical block.
+    """
+    b, hq, d = q_q.shape
+    num_blocks, hkv, block_k, _ = k_pages.shape
+    _, max_blocks = block_table.shape
+    group = hq // hkv
+    g_pad = max(8, group)
+
+    qg = q_q.reshape(b, hkv, group, d)
+    if g_pad != group:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
+    qf = qg.reshape(b * hkv, g_pad, d)
+
+    scalars = jnp.stack([
+        jnp.asarray(m_z, jnp.float32),
+        jnp.asarray(s_v, jnp.float32),
+        jnp.asarray(window if window is not None else 0, jnp.float32),
+        jnp.float32(0.0),
+    ])
+
+    kernel = functools.partial(
+        _paged_decode_kernel, cfg=cfg, hkv=hkv, block_k=block_k,
+        num_k_blocks=max_blocks, g_pad=g_pad, windowed=window is not None,
+        lut_mode=lut_mode, exact_recip=exact_recip)
+
+    def kv_index(bh, ki, lens_ref, table_ref, scalars_ref):
+        del lens_ref, scalars_ref
+        return (table_ref[bh // hkv, ki], bh % hkv, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b * hkv, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, g_pad, d), lambda bh, ki, *_: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), kv_index),
+            pl.BlockSpec((1, 1, block_k, d), kv_index),
+            pl.BlockSpec((256, 128), lambda *_: (0, 0)),
+            pl.BlockSpec((256, 128), lambda *_: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g_pad, d), lambda bh, ki, *_: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g_pad, d), jnp.float32),
+            pltpu.VMEM((g_pad, 128), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g_pad, d), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), block_table.astype(jnp.int32), scalars,
+      qf, k_pages, v_pages, _replicate_table(exp_lut),
+      _replicate_table(recip_lut))
 
     out = out.reshape(b, hkv, g_pad, d)[:, :, :group, :]
     return out.reshape(b, hq, d)

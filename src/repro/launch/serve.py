@@ -1,26 +1,334 @@
-"""Batched serving driver: continuous-batching decode over the int8 cache.
+"""Paged continuous-batching serving driver over the int8 KV block pool.
 
-Demonstrates the paper's decoder mapping end-to-end: prefill populates the
-int8 KV cache (K, V live quantized, as in the CIM array), then batched decode
-steps stream one token per sequence per step through the split-softmax
-datapath.  A tiny continuous-batching scheduler retires finished sequences
-and admits queued requests into freed slots.
+The paper's decoder mapping end-to-end, at serving granularity: K/V live
+int8 in a block pool (`repro.core.paged_kv`) exactly as they live in the CIM
+array, each slot owns a block-table row, and batched decode steps stream one
+token per sequence per step through the split-softmax datapath — gathering
+K/V tiles *through the table* in the Pallas decode kernel.
+
+The scheduler does real continuous batching:
+
+  * the first wave is one batched prefill that calibrates the pool's static
+    per-layer scales and writes each slot's own blocks;
+  * a finished sequence retires by returning its blocks to the free-list
+    allocator and pointing its table row at the trash block;
+  * a queued request is admitted into the freed slot with a **per-slot
+    prefill** (`steps.make_paged_prefill_step`) that writes only the new
+    slot's blocks — the rest of the batch keeps decoding undisturbed; no
+    batch-wide re-prefill ever happens after the first wave.
+
+``--cache dense`` keeps the pre-paged scheduler (admission = re-prefill the
+whole batch) as the measured baseline; ``benchmarks/run.py --json`` records
+both so the paged speedup under churn is a tracked artifact
+(``BENCH_serve.json``).
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama_1p1b \
-        --smoke --requests 8 --prompt-len 32 --gen 24
+        --smoke --requests 8 --slots 4 --prompt-len 32 --gen 24
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
+from repro.core import paged_kv
 from repro.launch import steps as st
 from repro.models import transformer as T
+
+
+def _percentile(xs: List[float], p: float) -> float:
+    return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
+
+
+def _finalize_stats(stats: Dict, finished: Dict, t0: float) -> Dict:
+    dt = time.time() - t0
+    total = sum(len(v) for v in finished.values())
+    step_s = stats.pop("step_s")
+    stats.update(
+        served=len(finished),
+        total_tokens=total,
+        wall_s=dt,
+        tok_s=total / max(dt, 1e-9),
+        p50_step_ms=_percentile(step_s, 50) * 1e3,
+        p99_step_ms=_percentile(step_s, 99) * 1e3,
+    )
+    return stats
+
+
+def serve_paged(params, cfg, prompts: List[np.ndarray], *, slots: int,
+                gen: int, block_k: int = 32, max_len: Optional[int] = None,
+                gens: Optional[Sequence[int]] = None,
+                warmup: bool = False, repeats: int = 1,
+                verbose: bool = False) -> Dict:
+    """Paged scheduler; returns a stats dict (tok/s, latency, prefill counts,
+    the generated sequences, and allocator accounting).
+
+    ``gens`` optionally staggers per-request generation lengths (churn: slots
+    retire at different steps).  ``warmup=True`` compiles each jitted step on
+    throwaway inputs before the clock starts, so the stats measure serving,
+    not XLA compilation.  ``repeats > 1`` (benchmarking) reruns the whole
+    schedule with the same compiled steps and keeps the fastest run.
+    """
+    requests = len(prompts)
+    prompt_len = len(prompts[0])
+    slots = min(slots, requests)
+    gens = list(gens) if gens is not None else [gen] * requests
+    assert len(gens) == requests
+    if max_len is None:
+        max_len = prompt_len + max(gens) + 8
+    bps = paged_kv.blocks_per_seq(max_len, block_k)
+
+    # every step that rewrites the cache donates it — the pool is the big
+    # buffer and must never be copied; slot indices are traced arrays so one
+    # executable serves every slot (a Python-int index would bake the slot
+    # into the jaxpr and recompile per value)
+    wave_prefill = jax.jit(st.make_paged_prefill_step(cfg, calibrate=True),
+                           donate_argnums=(2,))
+    slot_prefill = jax.jit(st.make_paged_prefill_step(cfg, calibrate=False),
+                           donate_argnums=(2,))
+    decode_step = jax.jit(st.make_decode_step(cfg), donate_argnums=(2,))
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def release_step(cache, slot):
+        cache = dict(cache, length=cache["length"].at[slot].set(0))
+        if "kv" in cache:
+            cache["kv"] = paged_kv.release_slot(cache["kv"], slot)
+        return cache
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def splice_token(tokens, slot, token):
+        return tokens.at[slot].set(token)
+
+    if warmup:
+        # compile every trace against a scratch cache (donated step-to-step)
+        w_tok = jnp.asarray(np.stack([prompts[0]] * slots))
+        w_blocks = jnp.arange(1, 1 + slots * bps,
+                              dtype=jnp.int32).reshape(slots, bps)
+        w_last, w_cache = wave_prefill(
+            params, w_tok, T.make_paged_cache(cfg, slots, max_len,
+                                              block_k=block_k),
+            jnp.arange(slots, dtype=jnp.int32), w_blocks)
+        w_l1, w_cache = slot_prefill(params, jnp.asarray(prompts[0])[None],
+                                     w_cache, jnp.asarray([0], jnp.int32),
+                                     w_blocks[:1])
+        int(jnp.argmax(w_l1[0]))        # the admission-path argmax variant
+        w_out, w_cache = decode_step(params, jnp.argmax(w_last, -1).astype(
+            jnp.int32), w_cache)
+        w_cache = release_step(w_cache, jnp.int32(0))
+        w_tok2 = splice_token(jnp.zeros((slots,), jnp.int32), jnp.int32(0),
+                              jnp.int32(0))
+        jax.block_until_ready((w_out, w_tok2))
+
+    def _run() -> Dict:
+        # fresh scheduler state per run; the jitted steps above are shared,
+        # so repeats measure serving on warm executables
+        cache = T.make_paged_cache(cfg, slots, max_len, block_k=block_k)
+        alloc = paged_kv.BlockAllocator(1 + slots * bps)
+        stats: Dict = {"batch_prefills": 0, "slot_prefills": 0,
+                       "decode_steps": 0, "step_s": []}
+        queue = list(range(requests))
+        generated: Dict[int, List[int]] = {}
+        finished: Dict[int, List[int]] = {}
+        slot_blocks: Dict[int, List[int]] = {}
+        active: Dict[int, int] = {}
+
+        t0 = time.time()
+        # ---- first wave: one batched prefill, per-slot block writes --------
+        for slot in range(slots):
+            active[slot] = queue.pop(0)
+            slot_blocks[slot] = alloc.alloc(bps)
+        block_ids = jnp.asarray(np.stack([slot_blocks[s]
+                                          for s in range(slots)]), jnp.int32)
+        tokens_in = jnp.asarray(np.stack([prompts[active[s]]
+                                          for s in range(slots)]))
+        last, cache = wave_prefill(params, tokens_in, cache,
+                                   jnp.arange(slots, dtype=jnp.int32),
+                                   block_ids)
+        stats["batch_prefills"] += 1
+        tokens = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        for slot in range(slots):
+            generated[active[slot]] = [int(tokens[slot])]
+
+        # ---- continuous batching: decode + per-slot admission --------------
+        while active:
+            ts = time.perf_counter()
+            logits, cache = decode_step(params, tokens, cache)
+            tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok_host = np.asarray(tokens)
+            stats["step_s"].append(time.perf_counter() - ts)
+            stats["decode_steps"] += 1
+            for slot in sorted(active):
+                rid = active[slot]
+                generated[rid].append(int(tok_host[slot]))
+                if len(generated[rid]) < gens[rid]:
+                    continue
+                # retire: recycle blocks, park the slot on the trash block
+                finished[rid] = generated.pop(rid)
+                del active[slot]
+                alloc.free(slot_blocks.pop(slot))
+                cache = release_step(cache, jnp.int32(slot))
+                if not queue:
+                    continue
+                # admit: per-slot prefill into recycled blocks; the other
+                # slots' caches are untouched and keep decoding
+                nid = queue.pop(0)
+                slot_blocks[slot] = alloc.alloc(bps)
+                last1, cache = slot_prefill(
+                    params, jnp.asarray(prompts[nid])[None], cache,
+                    jnp.asarray([slot], jnp.int32),
+                    jnp.asarray([slot_blocks[slot]], jnp.int32))
+                stats["slot_prefills"] += 1
+                active[slot] = nid
+                first = int(jnp.argmax(last1[0]))
+                generated[nid] = [first]
+                tokens = splice_token(tokens, jnp.int32(slot),
+                                      jnp.int32(first))
+
+        stats["leaked_blocks"] = alloc.live_count
+        stats["finished"] = finished
+        # analytic decode-read traffic (int8 K+V, mean live-block occupancy)
+        nl = cfg.n_layers
+        mean_gen = sum(gens) // (2 * len(gens))
+        mean_blocks = paged_kv.blocks_per_seq(prompt_len + mean_gen, block_k)
+        stats["kv_bytes_per_step"] = (2 * nl * slots * cfg.n_kv_heads
+                                      * mean_blocks * block_k * cfg.hd)
+        return _finalize_stats(stats, finished, t0)
+
+    best = _run()
+    for _ in range(repeats - 1):
+        run = _run()
+        if run["tok_s"] > best["tok_s"]:
+            best = run
+    return best
+
+
+def serve_dense(params, cfg, prompts: List[np.ndarray], *, slots: int,
+                gen: int, max_len: Optional[int] = None,
+                gens: Optional[Sequence[int]] = None,
+                warmup: bool = False, repeats: int = 1,
+                verbose: bool = False) -> Dict:
+    """Pre-paged baseline scheduler: admission re-prefills the *entire*
+    batch (prompt + generated-so-far for in-flight slots).  Kept as the A/B
+    reference the paged path is measured against."""
+    requests = len(prompts)
+    prompt_len = len(prompts[0])
+    slots = min(slots, requests)
+    gens = list(gens) if gens is not None else [gen] * requests
+    assert len(gens) == requests
+    if max_len is None:
+        max_len = prompt_len + max(gens) + 8
+    seq_pad = prompt_len + max(gens)    # fixed re-prefill width (one trace)
+
+    prefill_step = jax.jit(st.make_prefill_step(cfg, max_len))
+    decode_step = jax.jit(st.make_decode_step(cfg), donate_argnums=(2,))
+
+    @jax.jit
+    def reprefill_step(params, seqs, lens):
+        return T.prefill(params, seqs, cfg, T.make_cache(cfg, slots, max_len),
+                         valid_len=lens)
+
+    if warmup:
+        w_tok = jnp.asarray(np.stack([prompts[0]] * slots))
+        w_last, _ = prefill_step(params, {"tokens": w_tok})
+        w_seqs = jnp.zeros((slots, seq_pad), jnp.int32)
+        w_lens = jnp.full((slots,), prompt_len, jnp.int32)
+        _, w_cache = reprefill_step(params, w_seqs, w_lens)
+        w_out, _ = decode_step(params, jnp.argmax(w_last, -1).astype(
+            jnp.int32), w_cache)
+        jax.block_until_ready(w_out)
+
+    def _run() -> Dict:
+        stats: Dict = {"batch_prefills": 0, "slot_prefills": 0,
+                       "decode_steps": 0, "step_s": []}
+        queue = list(range(requests))
+        generated: Dict[int, List[int]] = {}
+        finished: Dict[int, List[int]] = {}
+        active: Dict[int, int] = {}
+
+        t0 = time.time()
+        for slot in range(slots):
+            active[slot] = queue.pop(0)
+        prompts_arr = jnp.asarray(np.stack([prompts[active[s]]
+                                            for s in range(slots)]))
+        last, cache = prefill_step(params, {"tokens": prompts_arr})
+        stats["batch_prefills"] += 1
+        tokens = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        for slot in range(slots):
+            generated[active[slot]] = [int(tokens[slot])]
+
+        while active:
+            ts = time.perf_counter()
+            logits, cache = decode_step(params, tokens, cache)
+            tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tok_host = np.asarray(tokens)
+            stats["step_s"].append(time.perf_counter() - ts)
+            stats["decode_steps"] += 1
+            retired = False
+            for slot in sorted(active):
+                rid = active[slot]
+                generated[rid].append(int(tok_host[slot]))
+                if len(generated[rid]) >= gens[rid]:
+                    finished[rid] = generated.pop(rid)
+                    del active[slot]
+                    retired = True
+                    if queue:
+                        active[slot] = queue.pop(0)
+                        generated[active[slot]] = []
+            if retired and active:
+                # admission (or plain retirement) = full-batch re-prefill,
+                # the throughput collapse the paged scheduler removes
+                seqs = np.zeros((slots, seq_pad), np.int32)
+                lens = np.ones((slots,), np.int32)
+                for slot, rid in active.items():
+                    seq = np.concatenate([prompts[rid],
+                                          np.asarray(generated[rid],
+                                                     np.int32)])
+                    seqs[slot, :len(seq)] = seq
+                    lens[slot] = len(seq)
+                last, cache = reprefill_step(params, jnp.asarray(seqs),
+                                             jnp.asarray(lens))
+                stats["batch_prefills"] += 1
+                tokens = jnp.argmax(last, axis=-1).astype(jnp.int32)
+                tok_host = np.asarray(tokens)
+                for slot, rid in active.items():
+                    generated[rid].append(int(tok_host[slot]))
+
+        stats["leaked_blocks"] = 0
+        stats["finished"] = finished
+        nl = cfg.n_layers
+        stats["kv_bytes_per_step"] = (2 * nl * slots * cfg.n_kv_heads
+                                      * max_len * cfg.hd)
+        return _finalize_stats(stats, finished, t0)
+
+    best = _run()
+    for _ in range(repeats - 1):
+        run = _run()
+        if run["tok_s"] > best["tok_s"]:
+            best = run
+    return best
+
+
+def serve(params, cfg, prompts: List[np.ndarray], *, slots: int, gen: int,
+          cache_kind: str = "paged", block_k: int = 32,
+          max_len: Optional[int] = None,
+          gens: Optional[Sequence[int]] = None,
+          warmup: bool = False, repeats: int = 1,
+          verbose: bool = False) -> Dict:
+    """Dispatch on the cache layout; see :func:`serve_paged`."""
+    if cache_kind == "paged":
+        return serve_paged(params, cfg, prompts, slots=slots, gen=gen,
+                           block_k=block_k, max_len=max_len, gens=gens,
+                           warmup=warmup, repeats=repeats, verbose=verbose)
+    assert cache_kind == "dense", cache_kind
+    return serve_dense(params, cfg, prompts, slots=slots, gen=gen,
+                       max_len=max_len, gens=gens, warmup=warmup,
+                       repeats=repeats, verbose=verbose)
 
 
 def main(argv=None) -> None:
@@ -31,6 +339,8 @@ def main(argv=None) -> None:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--block-k", type=int, default=32)
+    ap.add_argument("--cache", choices=("paged", "dense"), default="paged")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -42,70 +352,21 @@ def main(argv=None) -> None:
 
     key = jax.random.PRNGKey(args.seed)
     params = st.init_params_fn(cfg)(key)
-    max_len = args.prompt_len + args.gen + 8
-
-    prefill_step = jax.jit(st.make_prefill_step(cfg, max_len))
-    decode_step = jax.jit(st.make_decode_step(cfg), donate_argnums=(2,))
-
-    # request queue: deterministic synthetic prompts
     rng = np.random.default_rng(args.seed)
-    queue = [rng.integers(0, cfg.vocab_size, args.prompt_len,
-                          dtype=np.int32) for _ in range(args.requests)]
-    finished = {}
-    slots = min(args.slots, args.requests)
+    prompts = [rng.integers(0, cfg.vocab_size, args.prompt_len,
+                            dtype=np.int32) for _ in range(args.requests)]
 
-    t0 = time.time()
-    # ---- admit the first wave: batched prefill -----------------------------
-    active = {i: queue.pop(0) for i in range(slots)}
-    prompts = jnp.asarray(np.stack([active[i] for i in range(slots)]))
-    last, cache = prefill_step(params, {"tokens": prompts})
-    tokens = jnp.argmax(last, axis=-1).astype(jnp.int32)
-    generated = {i: [int(tokens[i])] for i in range(slots)}
-    served = 0
-    steps = 0
-
-    # ---- continuous batching loop ------------------------------------------
-    while active:
-        tokens_arr, cache = decode_step(params, tokens, cache)
-        tokens = jnp.argmax(tokens_arr, axis=-1).astype(jnp.int32)
-        steps += 1
-        retire = []
-        for slot, rid in enumerate(sorted(active)):
-            generated[rid].append(int(tokens[slot]))
-            if len(generated[rid]) >= args.gen:
-                retire.append(rid)
-        for rid in retire:
-            finished[rid] = generated[rid]
-            del active[rid]
-            served += 1
-            if queue:
-                # admit a new request into the freed slot: re-prefill the
-                # whole batch (simple scheduler; production would use
-                # per-slot prefill + cache splice)
-                new = queue.pop(0)
-                nid = max(list(active) + [rid]) + 1
-                active[nid] = new
-        if retire and active:
-            ids = sorted(active)
-            prompts = jnp.asarray(np.stack(
-                [np.asarray(active[i]) for i in ids] +
-                [np.zeros(args.prompt_len, np.int32)] * (slots - len(ids))))
-            last, cache = prefill_step(params, {"tokens": prompts})
-            tokens = jnp.argmax(last, axis=-1).astype(jnp.int32)
-            for slot, rid in enumerate(ids):
-                if rid not in generated:
-                    generated[rid] = []
-                generated[rid].append(int(tokens[slot]))
-        elif retire:
-            break
-
-    dt = time.time() - t0
-    total_tokens = sum(len(v) for v in finished.values())
-    print(f"served {served} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens / max(dt, 1e-9):.1f} tok/s, {steps} decode steps)",
-          flush=True)
-    for rid in sorted(finished):
-        print(f"  req {rid}: {finished[rid][:8]}...")
+    stats = serve(params, cfg, prompts, slots=args.slots, gen=args.gen,
+                  cache_kind=args.cache, block_k=args.block_k, verbose=True)
+    print(f"[{args.cache}] served {stats['served']} requests, "
+          f"{stats['total_tokens']} tokens in {stats['wall_s']:.2f}s "
+          f"({stats['tok_s']:.1f} tok/s, {stats['decode_steps']} decode "
+          f"steps, {stats['batch_prefills']} batch + "
+          f"{stats['slot_prefills']} slot prefills, "
+          f"p50/p99 step {stats['p50_step_ms']:.1f}/"
+          f"{stats['p99_step_ms']:.1f} ms)", flush=True)
+    for rid in sorted(stats["finished"]):
+        print(f"  req {rid}: {stats['finished'][rid][:8]}...")
 
 
 if __name__ == "__main__":

@@ -154,6 +154,25 @@ def make_prefill_step(cfg: ModelConfig, cache_len: int):
     return prefill_step
 
 
+def make_paged_prefill_step(cfg: ModelConfig, *, calibrate: bool):
+    """(params, tokens (B,S), cache, slot_ids (B,), block_ids (B, mb))
+    -> (last_logits, cache).
+
+    The per-slot admission primitive for the paged serving path: writes only
+    the named slots' blocks/table rows, so admitting one request never
+    re-prefills the rest of the batch.  ``calibrate`` is static: the first
+    wave fixes the pool's per-layer scales, admissions reuse them.
+    ``make_decode_step`` already handles paged caches transparently.
+    """
+    assert cfg.family != "encdec", "paged serving is decoder-only"
+
+    def prefill_step(params, tokens, cache, slot_ids, block_ids):
+        return T.prefill_paged(params, tokens, cfg, cache, slot_ids,
+                               block_ids, calibrate=calibrate)
+
+    return prefill_step
+
+
 def make_decode_step(cfg: ModelConfig):
     """(params, token (B,), cache) -> (logits (B, V), cache)."""
 

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import attention as core_attn
+from repro.core import paged_kv
 from repro.core import quantization as qlib
 from repro.core.attention import AttentionSpec
 from repro.dist.sharding import shard
@@ -139,6 +140,61 @@ def prefill_into_cache(layer_cache: Dict, k: jax.Array, v: jax.Array,
             "scale_k": jnp.reshape(s_k, (1, 1, 1, 1)),
             "scale_v": jnp.reshape(s_v, (1, 1, 1, 1)),
             "length": valid_len}
+
+
+def init_paged_kv_cache(cfg: ModelConfig, num_blocks: int, slots: int,
+                        blocks_per_slot: int, block_k: int,
+                        n_layers: Optional[int] = None) -> Dict:
+    """Stacked-by-layer paged int8 pool (see :mod:`repro.core.paged_kv`).
+
+    Same static per-layer scales as :func:`init_kv_cache`; the dense
+    ``(slots, max_len)`` rows are replaced by a block pool plus per-slot
+    block tables, so admission never touches another slot's cache."""
+    nl = n_layers if n_layers is not None else cfg.n_layers
+    return paged_kv.init_kv_pages(nl, num_blocks, cfg.n_kv_heads, block_k,
+                                  cfg.hd, slots, blocks_per_slot)
+
+
+def attn_block_decode_paged(params, x, layer_cache: Dict, cfg: ModelConfig, *,
+                            spec: Optional[AttentionSpec] = None
+                            ) -> Tuple[jax.Array, Dict]:
+    """One-token decode against one layer's slice of the paged pool.
+
+    ``layer_cache``: k_pages/v_pages (num_blocks, Hkv, block_k, hd), scalar
+    scales, block_table (B, max_blocks), length (B,).  The new token's K/V
+    are quantized with the static scales and scattered into the slot's
+    *current tail block* (table[b, pos // block_k]); retired slots point at
+    the trash block, so their writes are harmless.
+    """
+    b = x.shape[0]
+    dt = cfg.compute_dtype
+    hd = cfg.hd
+    spec = spec or cfg.attn_spec(serve=True)
+    table = layer_cache["block_table"]
+    mb = table.shape[1]
+    block_k = layer_cache["k_pages"].shape[2]
+    new_len = layer_cache["length"] + 1            # includes current token
+    positions = (new_len - 1)[:, None]             # (B, 1) absolute (RoPE)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    s_k = layer_cache["scale_k"].reshape(())
+    s_v = layer_cache["scale_v"].reshape(())
+    k_new = qlib.quantize(k[:, :, 0, :], s_k)      # (B, Hkv, hd)
+    v_new = qlib.quantize(v[:, :, 0, :], s_v)
+    # tail-block address; clamp so an over-run slot (retired but still
+    # stepping) stays inside its table row instead of reading OOB
+    pos = jnp.minimum(new_len - 1, mb * block_k - 1)
+    b_idx = jnp.arange(b)
+    blk = table[b_idx, pos // block_k]             # (B,) pool block ids
+    off = pos % block_k
+    k_pages = layer_cache["k_pages"].at[blk, :, off, :].set(k_new)
+    v_pages = layer_cache["v_pages"].at[blk, :, off, :].set(v_new)
+    out = core_attn.paged_decode_attention(
+        q[:, :, 0, :], k_pages, v_pages, table, s_k, s_v, new_len, spec)
+    out = out.reshape(b, 1, cfg.n_heads * hd)
+    out = L.linear_apply(params["wo"], out, dtype=dt)
+    new_cache = dict(layer_cache, k_pages=k_pages, v_pages=v_pages,
+                     length=new_len)
+    return out, new_cache
 
 
 def attn_block_decode(params, x, layer_cache: Dict, cfg: ModelConfig, *,

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import attention as core_attn
+from repro.core import paged_kv
 from repro.core import quantization as qlib
 from repro.dist.sharding import shard
 from repro.models import attention as A
@@ -138,6 +139,23 @@ def _block_decode(params, x, cache_slice, cfg: ModelConfig, kind: str
     fn = S.mamba1_apply if kind == "mamba1" else S.mamba2_apply
     out, new_state = fn(params["ssm"], h, cfg, state=cache_slice["ssm"])
     return x + out, dict(cache_slice, ssm=new_state)
+
+
+def _block_decode_paged(params, x, cache_slice, cfg: ModelConfig, kind: str
+                        ) -> Tuple[jax.Array, Dict]:
+    """One-token dense/moe block step against the paged pool slice."""
+    norm = _norm(cfg)
+    h = norm(params["norm1"], x)
+    attn_out, new_kv = A.attn_block_decode_paged(params["attn"], h,
+                                                 cache_slice["kv"], cfg)
+    x = x + attn_out
+    h = norm(params["norm2"], x)
+    if kind == "dense":
+        x = x + M.mlp_apply(params["mlp"], h, cfg)
+    else:
+        out, _ = MOE.moe_apply(params["moe"], h, cfg)
+        x = x + out
+    return x, dict(cache_slice, kv=new_kv)
 
 
 def _layer_kinds(cfg: ModelConfig):
@@ -362,6 +380,96 @@ def make_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
     return cache
 
 
+def make_paged_cache(cfg: ModelConfig, slots: int, max_len: int, *,
+                     block_k: int = 32,
+                     num_blocks: Optional[int] = None) -> Dict:
+    """Paged decode cache: int8 KV block pool + per-slot block tables.
+
+    Each slot can hold up to ``max_len`` positions spread over
+    ``ceil(max_len / block_k)`` pool blocks; the default pool size reserves
+    exactly that per slot plus the trash block (id 0).  SSM state stays
+    per-slot dense (it is O(1) per slot — nothing to page).
+    """
+    assert cfg.family in ("dense", "moe", "ssm"), (
+        f"paged cache supports dense/moe/ssm, not {cfg.family}")
+    cache: Dict[str, Any] = {"length": jnp.zeros((slots,), jnp.int32)}
+    if cfg.family in ("dense", "moe"):
+        bps = paged_kv.blocks_per_seq(max_len, block_k)
+        if num_blocks is None:
+            num_blocks = 1 + slots * bps
+        cache["kv"] = A.init_paged_kv_cache(cfg, num_blocks, slots, bps,
+                                            block_k)
+    else:
+        cache["ssm"] = S.init_ssm_state(cfg, slots, cfg.n_layers)
+    return cache
+
+
+def prefill_paged(params, tokens, cfg: ModelConfig, cache: Dict,
+                  slot_ids: jax.Array, block_ids: jax.Array, *,
+                  valid_len: Optional[jax.Array] = None,
+                  calibrate: bool = False) -> Tuple[jax.Array, Dict]:
+    """Prefill ``tokens (B, S)`` into the paged cache, touching only the
+    given slots' blocks — the per-slot admission primitive.
+
+    ``slot_ids (B,)`` are the table rows being (re)filled; ``block_ids
+    (B, blocks_per_slot)`` is each slot's full block reservation from the
+    allocator (prompt K/V lands in the leading ``ceil(S / block_k)`` blocks,
+    decode appends into the rest).  ``calibrate=True`` (first wave only)
+    sets the pool's static per-layer scales from this batch's absmax;
+    afterwards new requests quantize with the existing scales, exactly like
+    decode — the CIM array's calibration is a deploy-time constant.
+    """
+    b, s = tokens.shape[:2]
+    if valid_len is None:
+        valid_len = jnp.full((b,), s, jnp.int32)
+    logits, aux = forward(params, tokens, cfg, serve=True)
+    cache = dict(cache, length=cache["length"].at[slot_ids].set(valid_len))
+    if "kv" in aux:
+        kvc = cache["kv"]
+        block_k = kvc["k_pages"].shape[3]
+        mb = kvc["block_table"].shape[1]
+        assert block_ids.shape[1] == mb, (block_ids.shape, mb)
+        n_blk = paged_kv.blocks_per_seq(s, block_k)
+        assert n_blk <= mb, (s, block_k, mb)
+        k_all = jnp.concatenate([kv[0] for kv in _as_list(aux["kv"])], 0)
+        v_all = jnp.concatenate([kv[1] for kv in _as_list(aux["kv"])], 0)
+        pad = n_blk * block_k - s
+        if pad:
+            k_all = jnp.pad(k_all, ((0, 0),) * 3 + ((0, pad), (0, 0)))
+            v_all = jnp.pad(v_all, ((0, 0),) * 3 + ((0, pad), (0, 0)))
+        if calibrate:
+            s_k = qlib.absmax_scale(k_all, axis=(1, 2, 3, 4))  # (L,1,1,1,1)
+            s_v = qlib.absmax_scale(v_all, axis=(1, 2, 3, 4))
+        else:
+            s_k, s_v = kvc["scale_k"], kvc["scale_v"]
+
+        def to_blocks(x_q):
+            # (L, B, Hkv, n_blk*bk, hd) -> (L, B*n_blk, Hkv, bk, hd)
+            nl, _, hkv, _, hd = x_q.shape
+            x_q = x_q.reshape(nl, b, hkv, n_blk, block_k, hd)
+            return x_q.transpose(0, 1, 3, 2, 4, 5).reshape(
+                nl, b * n_blk, hkv, block_k, hd)
+
+        flat_ids = block_ids[:, :n_blk].reshape(-1)
+        kvc = dict(
+            kvc,
+            k_pages=kvc["k_pages"].at[:, flat_ids].set(
+                to_blocks(qlib.quantize(k_all, s_k))),
+            v_pages=kvc["v_pages"].at[:, flat_ids].set(
+                to_blocks(qlib.quantize(v_all, s_v))),
+            scale_k=s_k, scale_v=s_v,
+            block_table=kvc["block_table"].at[slot_ids].set(block_ids),
+            length=kvc["length"].at[slot_ids].set(valid_len))
+        cache["kv"] = kvc
+    if "ssm" in aux:
+        ssc = jax.tree.map(lambda pool, st: pool.at[:, slot_ids].set(st),
+                           cache["ssm"], aux["ssm"])
+        cache = dict(cache, ssm=ssc)
+    idx = jnp.maximum(valid_len - 1, 0)
+    last = jnp.take_along_axis(logits, idx[:, None, None], axis=1)[:, 0]
+    return last, cache
+
+
 def prefill(params, tokens, cfg: ModelConfig, cache: Dict, *,
             valid_len: Optional[jax.Array] = None,
             embed_override: Optional[jax.Array] = None
@@ -450,6 +558,28 @@ def _decode_segment(seg_params, x, cfg, kind, n, offset, cache):
 
     if kind in ("dense", "moe"):
         kvc = cache["kv"]
+        sl = slice(offset, offset + n)
+        if "k_pages" in kvc:                       # paged block pool
+
+            def body(x, xs):
+                layer_params, kp, vp, s_k, s_v = xs
+                slice_ = {"kv": {"k_pages": kp, "v_pages": vp,
+                                 "scale_k": s_k, "scale_v": s_v,
+                                 "block_table": kvc["block_table"],
+                                 "length": kvc["length"]}}
+                x, new_slice = _block_decode_paged(layer_params, x, slice_,
+                                                   cfg, kind)
+                nkv = new_slice["kv"]
+                return x, (nkv["k_pages"], nkv["v_pages"])
+
+            x, (kp, vp) = maybe_scan(
+                body, x, (seg_params, kvc["k_pages"][sl], kvc["v_pages"][sl],
+                          kvc["scale_k"][sl], kvc["scale_v"][sl]), cfg)
+            cache = dict(cache, kv=dict(
+                kvc,
+                k_pages=kvc["k_pages"].at[sl].set(kp),
+                v_pages=kvc["v_pages"].at[sl].set(vp)))
+            return x, cache
 
         def body(x, xs):
             layer_params, k_q, v_q, s_k, s_v = xs
@@ -460,7 +590,6 @@ def _decode_segment(seg_params, x, cfg, kind, n, offset, cache):
             nkv = new_slice["kv"]
             return x, (nkv["k_q"], nkv["v_q"])
 
-        sl = slice(offset, offset + n)
         x, (k_q, v_q) = maybe_scan(
             body, x, (seg_params, kvc["k_q"][sl], kvc["v_q"][sl],
                       kvc["scale_k"][sl], kvc["scale_v"][sl]), cfg)

@@ -104,7 +104,7 @@ def test_grad_accum_matches_big_batch():
 def test_param_sharding_rules():
     os.environ.setdefault("XLA_FLAGS", "")
     from jax.sharding import PartitionSpec as P
-    from repro.launch import sharding as sh
+    from repro.dist import sharding as sh
 
     class FakeMesh:
         axis_names = ("data", "model")
@@ -130,7 +130,7 @@ def test_param_sharding_rules():
 
 
 def test_moe_expert_sharding_rules():
-    from repro.launch import sharding as sh
+    from repro.dist import sharding as sh
 
     class FakeMesh:
         axis_names = ("data", "model")
