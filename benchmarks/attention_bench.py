@@ -3,9 +3,23 @@
 Wall-clock on this host (XLA paths; the Pallas kernels target TPU and are
 validated in interpret mode).  Derived column reports achieved GFLOP/s so the
 numbers are comparable across iterations of the perf loop.
+
+The ``decode.*`` rows measure the fused-vs-composed decode datapath:
+
+  * ``decode.composed_*`` runs the pre-fusion structure — quantize, QK^T +
+    requant, exp-LUT + mask, PV + denominator, reciprocal finalize — as five
+    separately-dispatched stages with every intermediate materialized, i.e.
+    the separate-kernels-with-HBM-round-trips pipeline the fused kernel
+    deletes.
+  * ``decode.fused_*`` is one launch of :func:`ops.splitmax_decode_fused`
+    (identical math; bit-identical output, asserted here).
+
+``run.py --json`` records both plus the ratio in ``BENCH_attention.json``;
+``perf_check.py`` gates on it.
 """
 from __future__ import annotations
 
+import functools
 import time
 from typing import List, Tuple
 
@@ -13,17 +27,112 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import lut as lut_lib
+from repro.core import quantization as qlib
 from repro.core import split_softmax as ss
 from repro.core.lut import LUTConfig
 from repro.kernels import ops
 
 
-def _time(fn, *args, iters: int = 3) -> float:
+def _time(fn, *args, iters: int = 5) -> float:
+    """us per call, min over ``iters`` (robust to scheduler noise — this
+    feeds the perf gate, so one slow outlier must not shift the baseline)."""
     jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(iters):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / iters * 1e6
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _staged_composed_decode(cfg: LUTConfig, el, rl, d: int, window=None):
+    """The pre-fusion decode pipeline as five separately-jitted stages.
+
+    Same math as ``blocked.grouped_splitmax_decode`` (bit-identical output),
+    but every stage is its own dispatch with its intermediate (int8 q, int8
+    scores, f32 exp weights, f32 accumulators) materialized in between —
+    the structure the fused kernel replaces.
+    """
+    sqrt_d = jnp.sqrt(jnp.float32(d))
+
+    @jax.jit
+    def quantize_q(q, s_q):
+        return qlib.quantize(q, s_q)
+
+    @jax.jit
+    def qk_requant(q_q, k_cache, s_q, s_k):
+        b, hq, _ = q_q.shape
+        hkv = k_cache.shape[1]
+        m_z = (s_q * s_k / (sqrt_d * cfg.scale_z)).astype(jnp.float32)
+        qg = q_q.reshape(b, hkv, hq // hkv, d).astype(jnp.int32)
+        z32 = jnp.einsum("bkgd,bksd->bkgs", qg, k_cache.astype(jnp.int32))
+        return qlib.requantize_int32(z32, m_z)
+
+    @jax.jit
+    def exp_mask(z_q, cache_len):
+        e = lut_lib.exp_lookup(z_q, el).astype(jnp.float32)
+        kpos = jnp.arange(z_q.shape[-1])[None, :]
+        valid = kpos < cache_len[:, None]
+        if window is not None:
+            valid &= kpos > cache_len[:, None] - 1 - window
+        return jnp.where(valid[:, None, None, :], e, 0.0)
+
+    @jax.jit
+    def pv_denom(e, v_cache):
+        acc = jnp.einsum("bkgs,bksd->bkgd", e, v_cache.astype(jnp.float32))
+        return acc, jnp.maximum(jnp.sum(e, axis=-1), 1.0)[..., None]
+
+    @jax.jit
+    def finalize(acc, ssum, s_v):
+        r, e2 = lut_lib.recip_lookup(ssum, rl, cfg)
+        out = lut_lib.recip_apply(acc, r, e2) * s_v
+        b, hkv, g, _ = acc.shape
+        return out.reshape(b, hkv * g, d)
+
+    def composed(q, k_cache, v_cache, s_q, s_k, s_v, cache_len):
+        q_q = quantize_q(q, s_q)
+        z_q = qk_requant(q_q, k_cache, s_q, s_k)
+        e = exp_mask(z_q, cache_len)
+        acc, ssum = pv_denom(e, v_cache)
+        return finalize(acc, ssum, s_v)
+
+    return composed
+
+
+def decode_rows() -> List[Tuple[str, float, str]]:
+    """Fused-vs-composed decode grid; asserts bit-identical outputs."""
+    rng = np.random.default_rng(0)
+    cfg = LUTConfig(scale_z=4.0 / 127)
+    el, rl = ss.make_luts(cfg)
+    s_q = jnp.float32(0.012)
+    s_k = jnp.float32(0.01)
+    s_v = jnp.float32(0.02)
+    b, hq, hkv = 8, 8, 2
+    rows = []
+    for d, n in ((64, 1024), (64, 2048), (128, 1024)):
+        q = jnp.asarray(rng.normal(0, 0.5, (b, hq, d)), jnp.float32)
+        k = jnp.asarray(rng.integers(-128, 128, (b, hkv, n, d)), jnp.int8)
+        v = jnp.asarray(rng.integers(-128, 128, (b, hkv, n, d)), jnp.int8)
+        lens = jnp.asarray(rng.integers(n // 2, n + 1, (b,)), jnp.int32)
+
+        composed = _staged_composed_decode(cfg, el, rl, d)
+        fused = jax.jit(functools.partial(
+            ops.splitmax_decode_fused, exp_lut=el, recip_lut=rl, cfg=cfg,
+            impl="auto"))
+
+        out_c = composed(q, k, v, s_q, s_k, s_v, lens)
+        out_f = fused(q, k, v, s_q, s_k, s_v, lens)
+        assert jnp.array_equal(out_c, out_f), (
+            f"fused/composed decode mismatch at d={d} n={n}")
+
+        us_c = _time(composed, q, k, v, s_q, s_k, s_v, lens)
+        us_f = _time(fused, q, k, v, s_q, s_k, s_v, lens)
+        rows.append((f"decode.composed_d{d}_s{n}", us_c,
+                     "5-stage pipeline, intermediates materialized"))
+        rows.append((f"decode.fused_d{d}_s{n}", us_f,
+                     f"single launch; {us_c / us_f:.2f}x vs composed"))
+    return rows
 
 
 def run() -> List[Tuple[str, float, str]]:
@@ -49,6 +158,7 @@ def run() -> List[Tuple[str, float, str]]:
         us = _time(fn, x, w)
         rows.append((f"gemm.int8_{m}", us,
                      f"{2 * m**3 / us / 1e3:.1f} GOP/s (host XLA)"))
+    rows += decode_rows()
     return rows
 
 

@@ -48,9 +48,20 @@ def run_json(out_dir: pathlib.Path) -> None:
     rows = attention_bench.run()
     attn_json = {"rows": {name: {"us_per_call": val, "derived": derived}
                           for name, val, derived in rows}}
+    # fused-vs-composed decode ratios, one per grid point (gated by
+    # perf_check.py: fused must keep beating the staged pipeline)
+    ratios = {}
+    for name, info in attn_json["rows"].items():
+        if name.startswith("decode.fused_"):
+            shape = name[len("decode.fused_"):]
+            composed = attn_json["rows"]["decode.composed_" + shape]
+            ratios[shape] = composed["us_per_call"] / info["us_per_call"]
+    attn_json["fused_over_composed"] = ratios
     (out_dir / "BENCH_attention.json").write_text(
         json.dumps(attn_json, indent=2) + "\n")
-    print(f"wrote {out_dir / 'BENCH_attention.json'} ({len(rows)} rows)")
+    ratio_str = ", ".join(f"{k} {v:.2f}x" for k, v in ratios.items())
+    print(f"wrote {out_dir / 'BENCH_attention.json'} ({len(rows)} rows; "
+          f"fused/composed: {ratio_str})")
 
 
 def main() -> None:

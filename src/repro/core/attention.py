@@ -43,6 +43,7 @@ class AttentionSpec:
     window: Optional[int] = None       # sliding-window size (SWA), None = full
     causal: bool = True
     impl: str = "auto"                 # kernel dispatch (see kernels/ops.py)
+    fused: bool = True                 # decode: fused quantize->QK^T->LUT->PV
     lut_mode: str = "onehot"
     exact_recip: bool = False
     block_q: int = 128
@@ -137,11 +138,20 @@ def decode_attention(q: jax.Array, k_cache_q: jax.Array, v_cache_q: jax.Array,
     assert spec.mode == "int8", spec.mode
     s_q = jax.lax.stop_gradient(qlib.absmax_scale(q))
     exp_lut, recip_lut = _luts_for(spec.scale_z)
-    out = ops.splitmax_decode(
-        qlib.quantize(q, s_q), k_cache_q, v_cache_q, s_q, s_k, s_v,
-        cache_len, exp_lut, recip_lut, cfg=spec.lut_config,
-        window=spec.window, block_k=spec.block_k, lut_mode=spec.lut_mode,
-        exact_recip=spec.exact_recip, impl=spec.impl)
+    if spec.fused:
+        # single-launch datapath: fp q enters the kernel, quantization
+        # happens in VMEM (no int8 q round-trip through HBM).
+        out = ops.splitmax_decode_fused(
+            q, k_cache_q, v_cache_q, s_q, s_k, s_v,
+            cache_len, exp_lut, recip_lut, cfg=spec.lut_config,
+            window=spec.window, block_k=None, lut_mode=spec.lut_mode,
+            exact_recip=spec.exact_recip, impl=spec.impl)
+    else:
+        out = ops.splitmax_decode(
+            qlib.quantize(q, s_q), k_cache_q, v_cache_q, s_q, s_k, s_v,
+            cache_len, exp_lut, recip_lut, cfg=spec.lut_config,
+            window=spec.window, block_k=spec.block_k, lut_mode=spec.lut_mode,
+            exact_recip=spec.exact_recip, impl=spec.impl)
     return out.astype(in_dtype)
 
 
@@ -169,9 +179,16 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     assert spec.mode == "int8", spec.mode
     s_q = jax.lax.stop_gradient(qlib.absmax_scale(q))
     exp_lut, recip_lut = _luts_for(spec.scale_z)
-    out = ops.splitmax_decode_paged(
-        qlib.quantize(q, s_q), k_pages, v_pages, block_table,
-        s_q, s_k, s_v, cache_len, exp_lut, recip_lut, cfg=spec.lut_config,
-        window=spec.window, lut_mode=spec.lut_mode,
-        exact_recip=spec.exact_recip, impl=spec.impl)
+    if spec.fused:
+        out = ops.splitmax_decode_fused_paged(
+            q, k_pages, v_pages, block_table,
+            s_q, s_k, s_v, cache_len, exp_lut, recip_lut, cfg=spec.lut_config,
+            window=spec.window, lut_mode=spec.lut_mode,
+            exact_recip=spec.exact_recip, impl=spec.impl)
+    else:
+        out = ops.splitmax_decode_paged(
+            qlib.quantize(q, s_q), k_pages, v_pages, block_table,
+            s_q, s_k, s_v, cache_len, exp_lut, recip_lut, cfg=spec.lut_config,
+            window=spec.window, lut_mode=spec.lut_mode,
+            exact_recip=spec.exact_recip, impl=spec.impl)
     return out.astype(in_dtype)

@@ -1,0 +1,164 @@
+"""Tile selection for the split-softmax decode kernels.
+
+The decode kernels walk the KV cache in ``block_k``-sized k-tiles and pad the
+GQA group onto the sublane dimension of a ``(g_pad, D)`` accumulator.  Both
+are pure perf knobs — every choice is bit-identical — so this module owns the
+choice the way Triton kernels pick tile configs per problem shape:
+
+  * a **static heuristic table** keyed by (head_dim, seq-length bucket)
+    supplies the default ``(block_k, g_pad_min)``.  Wider heads get smaller
+    k-tiles: VMEM per grid step is roughly ``2 * block_k * D`` int8 bytes of
+    K/V plus the f32 accumulator, and the budget is fixed.
+  * a **sweep mode** (`sweep_decode_tiles`) benchmarks the live candidates on
+    synthetic inputs and caches the winner process-wide, so serving picks it
+    up on the next dispatch.  The sweep is gated through
+    :func:`repro.kernels.pallas_compat.pallas_supported`: on TPU it times the
+    *compiled* fused kernel; elsewhere it times the interpreter (same tiling
+    behaviour, honest relative ordering, no Mosaic), so CI can exercise the
+    machinery.
+
+``python -m repro.kernels.autotune --head-dim 64 --seq-len 2048`` re-sweeps
+one shape from the command line and prints the table; `ROADMAP.md` documents
+the workflow.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.pallas_compat import pallas_supported
+
+# k-tile candidates, largest-first VMEM-safe set shared by dense and paged.
+CANDIDATE_BLOCK_K = (32, 64, 128, 256, 512)
+# sublane floor of the (g_pad, D) accumulator; 8 is the TPU minimum, 16
+# trades VMEM for fewer partially-filled sublanes on tiny GQA groups.
+CANDIDATE_G_PAD = (8, 16)
+
+# head_dim -> ((seq_len ceiling, block_k), ...); None = no ceiling.  Derived
+# from the VMEM argument above; the sweep overrides it with measurement.
+_HEURISTIC_TABLE: Dict[int, Tuple[Tuple[Optional[int], int], ...]] = {
+    32: ((256, 64), (2048, 128), (None, 256)),
+    64: ((256, 64), (2048, 128), (None, 256)),
+    128: ((512, 64), (None, 128)),
+    256: ((None, 64),),
+}
+
+# (kind, head_dim, s_max, compiled?) -> (block_k, g_pad_min); filled by sweeps
+_SWEEP_CACHE: Dict[Tuple, Tuple[int, int]] = {}
+
+
+def candidate_block_ks(s_max: int) -> List[int]:
+    """Candidates that tile ``s_max`` exactly (the kernels assert this)."""
+    cands = [c for c in CANDIDATE_BLOCK_K if c <= s_max and s_max % c == 0]
+    return cands or [s_max]
+
+
+def heuristic_block_k(head_dim: int, s_max: int) -> int:
+    """Table lookup, snapped to a divisor of ``s_max``."""
+    key = min((d for d in _HEURISTIC_TABLE if d >= head_dim),
+              default=max(_HEURISTIC_TABLE))
+    want = next(bk for ceil, bk in _HEURISTIC_TABLE[key]
+                if ceil is None or s_max <= ceil)
+    valid = candidate_block_ks(s_max)
+    return min(valid, key=lambda c: (abs(c - want), c))
+
+
+def decode_tile(head_dim: int, s_max: int, impl: str = "auto"
+                ) -> Tuple[int, int]:
+    """(block_k, g_pad_min) for a dense decode of ``s_max`` cached tokens.
+
+    Swept winners (exact shape match) beat the heuristic table.
+    """
+    key = ("decode", head_dim, s_max, pallas_supported())
+    if key in _SWEEP_CACHE:
+        return _SWEEP_CACHE[key]
+    return heuristic_block_k(head_dim, s_max), 8
+
+
+def clear_sweep_cache() -> None:
+    _SWEEP_CACHE.clear()
+
+
+def _time_call(fn, *args, iters: int) -> float:
+    jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def sweep_decode_tiles(head_dim: int, s_max: int, *, b: int = 4, hq: int = 4,
+                       hkv: int = 2, iters: int = 3, seed: int = 0,
+                       g_pads: Tuple[int, ...] = CANDIDATE_G_PAD,
+                       verbose: bool = False) -> Dict[Tuple[int, int], float]:
+    """Benchmark every (block_k, g_pad_min) candidate for one decode shape.
+
+    Times the *fused* kernel (the production path).  Compiled Pallas when
+    :func:`pallas_supported`, interpreter otherwise — the gate, not the
+    caller, decides.  Caches the winner for :func:`decode_tile` and returns
+    the full ``{(block_k, g_pad_min): seconds}`` timing table.
+    """
+    from repro.core import split_softmax as ss
+    from repro.core.lut import LUTConfig
+    from repro.kernels.splitmax_decode import splitmax_decode_fused_pallas
+
+    compiled = pallas_supported()
+    cfg = LUTConfig(scale_z=2.6 / 127)
+    exp_lut, recip_lut = ss.make_luts(cfg)
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(0, 0.5, (b, hq, head_dim)), jnp.float32)
+    k = jnp.asarray(rng.integers(-128, 128, (b, hkv, s_max, head_dim)),
+                    jnp.int8)
+    v = jnp.asarray(rng.integers(-128, 128, (b, hkv, s_max, head_dim)),
+                    jnp.int8)
+    lens = jnp.full((b,), s_max, jnp.int32)
+    m_z = jnp.float32(1e-4)
+    s_q = jnp.float32(0.01)
+    s_v = jnp.float32(0.02)
+
+    timings: Dict[Tuple[int, int], float] = {}
+    for block_k in candidate_block_ks(s_max):
+        for g_pad in g_pads:
+            def run(q, k, v, lens, _bk=block_k, _gp=g_pad):
+                return splitmax_decode_fused_pallas(
+                    q, k, v, m_z, s_q, s_v, lens, exp_lut, recip_lut,
+                    cfg=cfg, block_k=_bk, g_pad_min=_gp,
+                    interpret=not compiled)
+            timings[(block_k, g_pad)] = _time_call(run, q, k, v, lens,
+                                                   iters=iters)
+            if verbose:
+                print(f"  block_k={block_k:4d} g_pad={g_pad:2d}  "
+                      f"{timings[(block_k, g_pad)] * 1e6:9.1f} us"
+                      f"  ({'pallas' if compiled else 'interpret'})")
+
+    winner = min(timings, key=timings.get)
+    _SWEEP_CACHE[("decode", head_dim, s_max, compiled)] = winner
+    return timings
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="re-sweep decode tile sizes for one shape")
+    ap.add_argument("--head-dim", type=int, default=64)
+    ap.add_argument("--seq-len", type=int, default=2048)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=3)
+    args = ap.parse_args(argv)
+    print(f"sweeping decode tiles: head_dim={args.head_dim} "
+          f"s_max={args.seq_len} "
+          f"({'compiled pallas' if pallas_supported() else 'interpret'})")
+    sweep_decode_tiles(args.head_dim, args.seq_len, b=args.batch,
+                       iters=args.iters, verbose=True)
+    bk, gp = decode_tile(args.head_dim, args.seq_len)
+    print(f"winner: block_k={bk} g_pad_min={gp}")
+
+
+if __name__ == "__main__":
+    main()

@@ -23,12 +23,16 @@ import jax.numpy as jnp
 
 from repro.core import lut as lut_lib
 from repro.core import paged_kv
+from repro.core import quantization as qlib
 from repro.core.lut import LUTConfig
+from repro.kernels import autotune
 from repro.kernels import blocked as blocked_lib
 from repro.kernels import ref as ref_lib
 from repro.kernels.int8_matmul import int8_matmul_pallas
 from repro.kernels.splitmax_attn import splitmax_attention_pallas
-from repro.kernels.splitmax_decode import (splitmax_decode_paged_pallas,
+from repro.kernels.splitmax_decode import (splitmax_decode_fused_paged_pallas,
+                                           splitmax_decode_fused_pallas,
+                                           splitmax_decode_paged_pallas,
                                            splitmax_decode_pallas)
 
 
@@ -99,12 +103,15 @@ def splitmax_decode(
     *,
     cfg: LUTConfig,
     window: Optional[int] = None,
-    block_k: int = 128,
+    block_k: Optional[int] = 128,
     lut_mode: str = "onehot",
     exact_recip: bool = False,
     impl: str = "auto",
 ) -> jax.Array:
-    """(B,Hq,D) int8 x (B,Hkv,S,D) int8 cache -> (B,Hq,D) f32."""
+    """(B,Hq,D) int8 x (B,Hkv,S,D) int8 cache -> (B,Hq,D) f32.
+
+    ``block_k=None`` delegates the k-tile choice to ``kernels/autotune``.
+    """
     impl = _resolve(impl)
     if impl == "ref":
         return ref_lib.splitmax_decode_ref(
@@ -115,12 +122,58 @@ def splitmax_decode(
             q_q, k_cache, v_cache, s_q, s_k, s_v, cache_len, cfg,
             exp_lut, recip_lut, window=window, exact_recip=exact_recip)
     d = q_q.shape[-1]
+    g_pad_min = 8
+    if block_k is None:
+        block_k, g_pad_min = autotune.decode_tile(d, k_cache.shape[2], impl)
     m_z = (s_q * s_k / (jnp.sqrt(jnp.float32(d)) * cfg.scale_z)
            ).astype(jnp.float32)
     return splitmax_decode_pallas(
         q_q, k_cache, v_cache, m_z, s_v, cache_len, exp_lut, recip_lut,
-        cfg=cfg, window=window, block_k=block_k, lut_mode=lut_mode,
-        exact_recip=exact_recip, interpret=(impl == "interpret"))
+        cfg=cfg, window=window, block_k=block_k, g_pad_min=g_pad_min,
+        lut_mode=lut_mode, exact_recip=exact_recip,
+        interpret=(impl == "interpret"))
+
+
+def splitmax_decode_fused(
+    q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+    s_q: jax.Array, s_k: jax.Array, s_v: jax.Array,
+    cache_len: jax.Array,
+    exp_lut: jax.Array, recip_lut: jax.Array,
+    *,
+    cfg: LUTConfig,
+    window: Optional[int] = None,
+    block_k: Optional[int] = None,
+    lut_mode: str = "onehot",
+    exact_recip: bool = False,
+    impl: str = "auto",
+) -> jax.Array:
+    """Fused decode: fp (B,Hq,D) q x int8 cache -> (B,Hq,D) f32.
+
+    The Pallas path quantizes q *inside* the kernel (scalar-prefetched
+    ``s_q``) and streams quantize -> QK^T -> LUT split-softmax -> PV with no
+    HBM writes between stages.  The ref/XLA fallbacks quantize first and run
+    the composed path — the identical round+clip, so every impl bit-matches
+    the composed pipeline.  ``block_k=None`` (the default) asks
+    ``kernels/autotune`` for the k-tile.
+    """
+    impl = _resolve(impl)
+    if impl in ("ref", "xla"):
+        q_q = qlib.quantize(q, s_q)
+        fn = (ref_lib.splitmax_decode_ref if impl == "ref"
+              else blocked_lib.grouped_splitmax_decode)
+        return fn(q_q, k_cache, v_cache, s_q, s_k, s_v, cache_len, cfg,
+                  exp_lut, recip_lut, window=window, exact_recip=exact_recip)
+    d = q.shape[-1]
+    g_pad_min = 8
+    if block_k is None:
+        block_k, g_pad_min = autotune.decode_tile(d, k_cache.shape[2], impl)
+    m_z = (s_q * s_k / (jnp.sqrt(jnp.float32(d)) * cfg.scale_z)
+           ).astype(jnp.float32)
+    return splitmax_decode_fused_pallas(
+        q, k_cache, v_cache, m_z, s_q, s_v, cache_len, exp_lut, recip_lut,
+        cfg=cfg, window=window, block_k=block_k, g_pad_min=g_pad_min,
+        lut_mode=lut_mode, exact_recip=exact_recip,
+        interpret=(impl == "interpret"))
 
 
 def splitmax_decode_paged(
@@ -156,6 +209,46 @@ def splitmax_decode_paged(
            ).astype(jnp.float32)
     return splitmax_decode_paged_pallas(
         q_q, k_pages, v_pages, block_table, m_z, s_v, cache_len,
+        exp_lut, recip_lut, cfg=cfg, window=window, lut_mode=lut_mode,
+        exact_recip=exact_recip, interpret=(impl == "interpret"))
+
+
+def splitmax_decode_fused_paged(
+    q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+    block_table: jax.Array,
+    s_q: jax.Array, s_k: jax.Array, s_v: jax.Array,
+    cache_len: jax.Array,
+    exp_lut: jax.Array, recip_lut: jax.Array,
+    *,
+    cfg: LUTConfig,
+    window: Optional[int] = None,
+    lut_mode: str = "onehot",
+    exact_recip: bool = False,
+    impl: str = "auto",
+) -> jax.Array:
+    """Fused paged decode: fp q + in-kernel quantize + block-table gather.
+
+    Pallas path = one kernel launch for the whole serving datapath (the pool
+    tile gather rides the BlockSpec index map, the quantize rides scalar
+    prefetch).  Ref/XLA fallbacks materialize the gather, quantize, and run
+    the composed dense decode — bit-matching the composed paged path.
+    ``block_k`` is fixed by the pool layout, so only the accumulator pad is
+    tunable here.
+    """
+    impl = _resolve(impl)
+    if impl in ("ref", "xla"):
+        q_q = qlib.quantize(q, s_q)
+        k_cache = paged_kv.gather_kv(k_pages, block_table)
+        v_cache = paged_kv.gather_kv(v_pages, block_table)
+        fn = (ref_lib.splitmax_decode_ref if impl == "ref"
+              else blocked_lib.grouped_splitmax_decode)
+        return fn(q_q, k_cache, v_cache, s_q, s_k, s_v, cache_len, cfg,
+                  exp_lut, recip_lut, window=window, exact_recip=exact_recip)
+    d = q.shape[-1]
+    m_z = (s_q * s_k / (jnp.sqrt(jnp.float32(d)) * cfg.scale_z)
+           ).astype(jnp.float32)
+    return splitmax_decode_fused_paged_pallas(
+        q, k_pages, v_pages, block_table, m_z, s_q, s_v, cache_len,
         exp_lut, recip_lut, cfg=cfg, window=window, lut_mode=lut_mode,
         exact_recip=exact_recip, interpret=(impl == "interpret"))
 

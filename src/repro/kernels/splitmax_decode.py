@@ -12,13 +12,30 @@ The GQA group of query heads sharing one KV head forms the sublane dimension
 of the q tile, so one kernel instance serves a (batch, kv-head) pair:
 
   grid = (B * Hkv, S_max / block_k)
-  q    : (1, G_pad, D) int8      (G query heads, padded to >= 8 sublanes)
+  q    : (1, G_pad, D) int8 — or float32 on the *fused* entry points
   k/v  : (1, block_k, D) int8    (the int8 KV cache — CIMple stores K,V in
                                   the CIM array in int8)
   out  : (1, G_pad, D) f32
 
 Per-batch valid cache lengths arrive via scalar prefetch (SMEM), giving the
 ragged masking a real serving system needs.
+
+Fused datapath (``splitmax_decode_fused_pallas`` and the paged twin)
+--------------------------------------------------------------------
+The fused entry points take the *float* query and run the whole CIM datapath
+— quantize -> QK^T -> 32b->8b requant -> exp-LUT split accumulation -> PV ->
+reciprocal LUT — inside one kernel instance, with no HBM writes between
+stages.  The absmax scale ``s_q`` rides in scalar prefetch; the int8 grid
+snap happens once per (batch, kv-head) instance at ``ki == 0`` into an int32
+VMEM scratch tile, bit-identical to ``repro.core.quantization.quantize``
+(same round + clip), so the fused path and the composed path (quantize op,
+then the int8 kernel) agree to the bit.  This mirrors CIMple's dual-banked
+macro, where scores never leave the array between QK^T and PV, and is the
+repo's hottest serving kernel.
+
+Tile shapes (``block_k`` and the sublane floor ``g_pad_min`` of the
+accumulator) are selection knobs; :mod:`repro.kernels.autotune` owns the
+per-(head_dim, seq_len) defaults and the sweep that overrides them.
 
 Two cache layouts share the kernel math:
 
@@ -90,12 +107,23 @@ def _finalize_tile(out_ref, acc_ref, s_ref, recip_ref, *, s_v,
     out_ref[0] = acc_ref[...] * r * s_v
 
 
+def _quantize_q_tile(q_f32, s_q):
+    """In-kernel stage 0 of the fused datapath: fp q tile -> int8 grid.
+
+    Bit-identical to :func:`repro.core.quantization.quantize` (round to
+    nearest even, saturate), held as int32 because that is what the MXU
+    matmul consumes anyway.
+    """
+    return jnp.clip(jnp.round(q_f32.astype(jnp.float32) / s_q),
+                    -128, 127).astype(jnp.int32)
+
+
 def _decode_kernel(
     # scalar prefetch
     lens_ref,               # SMEM (B,) int32 — valid cache length per batch
-    scalars_ref,            # SMEM (4,) f32 — [m_z, s_v, window, unused]
+    scalars_ref,            # SMEM (4,) f32 — [m_z, s_v, window, s_q]
     # inputs
-    q_ref,                  # (1, G_pad, D) int8
+    q_ref,                  # (1, G_pad, D) int8 (composed) / f32 (fused)
     k_ref,                  # (1, block_k, D) int8
     v_ref,                  # (1, block_k, D) int8
     exp_ref, recip_ref,     # (256, 128) f32
@@ -104,7 +132,7 @@ def _decode_kernel(
     # scratch
     acc_ref,                # (G_pad, D) f32
     s_ref,                  # (G_pad, 128) f32
-    *,
+    *extra_scratch,         # fused only: (G_pad, D) int32 quantized q
     cfg: LUTConfig,
     hkv: int,
     block_k: int,
@@ -113,15 +141,20 @@ def _decode_kernel(
     windowed: bool,
     lut_mode: str,
     exact_recip: bool,
+    fused: bool,
 ):
     bh = pl.program_id(0)
     ki = pl.program_id(1)
     b = bh // hkv
+    qq_ref = extra_scratch[0] if fused else None
 
     @pl.when(ki == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         s_ref[...] = jnp.zeros_like(s_ref)
+        if fused:
+            # quantize once per instance; every k-tile reuses the VMEM copy
+            qq_ref[...] = _quantize_q_tile(q_ref[0], scalars_ref[3])
 
     m_z = scalars_ref[0]
     s_v = scalars_ref[1]
@@ -136,8 +169,9 @@ def _decode_kernel(
 
     @pl.when(live)
     def _compute():
+        q = qq_ref[...] if fused else q_ref[0].astype(jnp.int32)
         _accumulate_tile(
-            q_ref[0].astype(jnp.int32), k_ref[0], v_ref[0],
+            q, k_ref[0], v_ref[0],
             m_z=m_z, cache_len=cache_len, k_start=k_start, window=window,
             windowed=windowed, acc_ref=acc_ref, s_ref=s_ref, exp_ref=exp_ref,
             cfg=cfg, g_pad=g_pad, block_k=block_k, lut_mode=lut_mode)
@@ -152,9 +186,9 @@ def _paged_decode_kernel(
     # scalar prefetch
     lens_ref,               # SMEM (B,) int32 — valid length per slot
     table_ref,              # SMEM (B, max_blocks) int32 — block table
-    scalars_ref,            # SMEM (4,) f32 — [m_z, s_v, window, unused]
+    scalars_ref,            # SMEM (4,) f32 — [m_z, s_v, window, s_q]
     # inputs
-    q_ref,                  # (1, G_pad, D) int8
+    q_ref,                  # (1, G_pad, D) int8 (composed) / f32 (fused)
     k_ref,                  # (1, 1, block_k, D) int8 — pool tile via table
     v_ref,                  # (1, 1, block_k, D) int8
     exp_ref, recip_ref,     # (256, 128) f32
@@ -163,7 +197,7 @@ def _paged_decode_kernel(
     # scratch
     acc_ref,                # (G_pad, D) f32
     s_ref,                  # (G_pad, 128) f32
-    *,
+    *extra_scratch,         # fused only: (G_pad, D) int32 quantized q
     cfg: LUTConfig,
     hkv: int,
     block_k: int,
@@ -172,6 +206,7 @@ def _paged_decode_kernel(
     windowed: bool,
     lut_mode: str,
     exact_recip: bool,
+    fused: bool,
 ):
     """Block-table decode: identical math to :func:`_decode_kernel`; the only
     difference is that the k/v tiles were fetched *through the table* by the
@@ -182,11 +217,14 @@ def _paged_decode_kernel(
     ki = pl.program_id(1)
     b = bh // hkv
     del table_ref  # consumed by the index maps, not the body
+    qq_ref = extra_scratch[0] if fused else None
 
     @pl.when(ki == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
         s_ref[...] = jnp.zeros_like(s_ref)
+        if fused:
+            qq_ref[...] = _quantize_q_tile(q_ref[0], scalars_ref[3])
 
     m_z = scalars_ref[0]
     s_v = scalars_ref[1]
@@ -201,8 +239,9 @@ def _paged_decode_kernel(
 
     @pl.when(live)
     def _compute():
+        q = qq_ref[...] if fused else q_ref[0].astype(jnp.int32)
         _accumulate_tile(
-            q_ref[0].astype(jnp.int32), k_ref[0, 0], v_ref[0, 0],
+            q, k_ref[0, 0], v_ref[0, 0],
             m_z=m_z, cache_len=cache_len, k_start=k_start, window=window,
             windowed=windowed, acc_ref=acc_ref, s_ref=s_ref, exp_ref=exp_ref,
             cfg=cfg, g_pad=g_pad, block_k=block_k, lut_mode=lut_mode)
@@ -213,10 +252,151 @@ def _paged_decode_kernel(
                        cfg=cfg, exact_recip=exact_recip)
 
 
+# ---------------------------------------------------------------------------
+# launchers (shared between composed int8 entry and fused fp entry)
+# ---------------------------------------------------------------------------
+
+def _pad_q_groups(q, hkv: int, g_pad: int):
+    """(B, Hq, D) -> (B*Hkv, G_pad, D): GQA groups on the sublane dim."""
+    b, hq, d = q.shape
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, d)
+    if g_pad != group:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
+    return qg.reshape(b * hkv, g_pad, d)
+
+
+def _decode_scalars(m_z, s_v, window, s_q):
+    return jnp.stack([
+        jnp.asarray(m_z, jnp.float32),
+        jnp.asarray(s_v, jnp.float32),
+        jnp.asarray(window if window is not None else 0, jnp.float32),
+        jnp.asarray(s_q if s_q is not None else 0.0, jnp.float32),
+    ])
+
+
+def _dense_decode_call(q, k_cache, v_cache, m_z, s_q, s_v, cache_len,
+                       exp_lut, recip_lut, *, cfg, window, block_k, g_pad_min,
+                       lut_mode, exact_recip, interpret, fused):
+    b, hq, d = q.shape
+    _, hkv, s_max, _ = k_cache.shape
+    group = hq // hkv
+    g_pad = max(g_pad_min, 8, group)          # sublane-align the q tile
+    assert s_max % block_k == 0, (s_max, block_k)
+    nk = s_max // block_k
+
+    if fused:
+        q = q.astype(jnp.float32)
+    qf = _pad_q_groups(q, hkv, g_pad)
+    kf = k_cache.reshape(b * hkv, s_max, d)
+    vf = v_cache.reshape(b * hkv, s_max, d)
+
+    kernel = functools.partial(
+        _decode_kernel, cfg=cfg, hkv=hkv, block_k=block_k, num_k_blocks=nk,
+        g_pad=g_pad, windowed=window is not None, lut_mode=lut_mode,
+        exact_recip=exact_recip, fused=fused)
+
+    scratch = [
+        pltpu.VMEM((g_pad, d), jnp.float32),
+        pltpu.VMEM((g_pad, 128), jnp.float32),
+    ]
+    if fused:
+        scratch.append(pltpu.VMEM((g_pad, d), jnp.int32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, g_pad, d), lambda bh, ki, *_: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, ki, *_: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, ki, *_: (bh, ki, 0)),
+            pl.BlockSpec((256, 128), lambda *_: (0, 0)),
+            pl.BlockSpec((256, 128), lambda *_: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g_pad, d), lambda bh, ki, *_: (bh, 0, 0)),
+        scratch_shapes=scratch,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g_pad, d), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), _decode_scalars(m_z, s_v, window, s_q),
+      qf, kf, vf, _replicate_table(exp_lut), _replicate_table(recip_lut))
+
+    out = out.reshape(b, hkv, g_pad, d)[:, :, :group, :]
+    return out.reshape(b, hq, d)
+
+
+def _paged_decode_call(q, k_pages, v_pages, block_table, m_z, s_q, s_v,
+                       cache_len, exp_lut, recip_lut, *, cfg, window,
+                       g_pad_min, lut_mode, exact_recip, interpret, fused):
+    b, hq, d = q.shape
+    num_blocks, hkv, block_k, _ = k_pages.shape
+    _, max_blocks = block_table.shape
+    group = hq // hkv
+    g_pad = max(g_pad_min, 8, group)
+
+    if fused:
+        q = q.astype(jnp.float32)
+    qf = _pad_q_groups(q, hkv, g_pad)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, cfg=cfg, hkv=hkv, block_k=block_k,
+        num_k_blocks=max_blocks, g_pad=g_pad, windowed=window is not None,
+        lut_mode=lut_mode, exact_recip=exact_recip, fused=fused)
+
+    def kv_index(bh, ki, lens_ref, table_ref, scalars_ref):
+        del lens_ref, scalars_ref
+        return (table_ref[bh // hkv, ki], bh % hkv, 0, 0)
+
+    scratch = [
+        pltpu.VMEM((g_pad, d), jnp.float32),
+        pltpu.VMEM((g_pad, 128), jnp.float32),
+    ]
+    if fused:
+        scratch.append(pltpu.VMEM((g_pad, d), jnp.int32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b * hkv, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, g_pad, d), lambda bh, ki, *_: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), kv_index),
+            pl.BlockSpec((1, 1, block_k, d), kv_index),
+            pl.BlockSpec((256, 128), lambda *_: (0, 0)),
+            pl.BlockSpec((256, 128), lambda *_: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, g_pad, d), lambda bh, ki, *_: (bh, 0, 0)),
+        scratch_shapes=scratch,
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hkv, g_pad, d), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), block_table.astype(jnp.int32),
+      _decode_scalars(m_z, s_v, window, s_q), qf, k_pages, v_pages,
+      _replicate_table(exp_lut), _replicate_table(recip_lut))
+
+    out = out.reshape(b, hkv, g_pad, d)[:, :, :group, :]
+    return out.reshape(b, hq, d)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "window", "block_k", "lut_mode", "exact_recip",
-                     "interpret"))
+    static_argnames=("cfg", "window", "block_k", "g_pad_min", "lut_mode",
+                     "exact_recip", "interpret"))
 def splitmax_decode_pallas(
     q_q: jax.Array,            # (B, Hq, D) int8 — one new token
     k_cache: jax.Array,        # (B, Hkv, S_max, D) int8
@@ -230,72 +410,60 @@ def splitmax_decode_pallas(
     cfg: LUTConfig,
     window: Optional[int] = None,
     block_k: int = 128,
+    g_pad_min: int = 8,
     lut_mode: str = "onehot",
     exact_recip: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
-    """Returns (B, Hq, D) float32 — attention output for the new token."""
-    b, hq, d = q_q.shape
-    _, hkv, s_max, _ = k_cache.shape
-    group = hq // hkv
-    g_pad = max(8, group)                     # sublane-align the q tile
-    assert s_max % block_k == 0, (s_max, block_k)
-    nk = s_max // block_k
-
-    # (B, Hkv, G, D) with sublane padding
-    qg = q_q.reshape(b, hkv, group, d)
-    if g_pad != group:
-        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
-    qf = qg.reshape(b * hkv, g_pad, d)
-    kf = k_cache.reshape(b * hkv, s_max, d)
-    vf = v_cache.reshape(b * hkv, s_max, d)
-
-    scalars = jnp.stack([
-        jnp.asarray(m_z, jnp.float32),
-        jnp.asarray(s_v, jnp.float32),
-        jnp.asarray(window if window is not None else 0, jnp.float32),
-        jnp.float32(0.0),
-    ])
-
-    kernel = functools.partial(
-        _decode_kernel, cfg=cfg, hkv=hkv, block_k=block_k, num_k_blocks=nk,
-        g_pad=g_pad, windowed=window is not None, lut_mode=lut_mode,
-        exact_recip=exact_recip)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
-        grid=(b * hkv, nk),
-        in_specs=[
-            pl.BlockSpec((1, g_pad, d), lambda bh, ki, *_: (bh, 0, 0)),
-            pl.BlockSpec((1, block_k, d), lambda bh, ki, *_: (bh, ki, 0)),
-            pl.BlockSpec((1, block_k, d), lambda bh, ki, *_: (bh, ki, 0)),
-            pl.BlockSpec((256, 128), lambda *_: (0, 0)),
-            pl.BlockSpec((256, 128), lambda *_: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, g_pad, d), lambda bh, ki, *_: (bh, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((g_pad, d), jnp.float32),
-            pltpu.VMEM((g_pad, 128), jnp.float32),
-        ],
-    )
-
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b * hkv, g_pad, d), jnp.float32),
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret,
-    )(cache_len.astype(jnp.int32), scalars, qf, kf, vf,
-      _replicate_table(exp_lut), _replicate_table(recip_lut))
-
-    out = out.reshape(b, hkv, g_pad, d)[:, :, :group, :]
-    return out.reshape(b, hq, d)
+    """Composed entry: pre-quantized int8 q.  Returns (B, Hq, D) float32."""
+    return _dense_decode_call(
+        q_q, k_cache, v_cache, m_z, None, s_v, cache_len, exp_lut, recip_lut,
+        cfg=cfg, window=window, block_k=block_k, g_pad_min=g_pad_min,
+        lut_mode=lut_mode, exact_recip=exact_recip, interpret=interpret,
+        fused=False)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("cfg", "window", "lut_mode", "exact_recip", "interpret"))
+    static_argnames=("cfg", "window", "block_k", "g_pad_min", "lut_mode",
+                     "exact_recip", "interpret"))
+def splitmax_decode_fused_pallas(
+    q: jax.Array,              # (B, Hq, D) float — one new token, UNquantized
+    k_cache: jax.Array,        # (B, Hkv, S_max, D) int8
+    v_cache: jax.Array,        # (B, Hkv, S_max, D) int8
+    m_z: jax.Array,            # scalar f32
+    s_q: jax.Array,            # scalar f32 — q quantization scale (absmax)
+    s_v: jax.Array,            # scalar f32
+    cache_len: jax.Array,      # (B,) int32 — valid entries incl. current token
+    exp_lut: jax.Array,        # (256,) int32
+    recip_lut: jax.Array,      # (256,) int32
+    *,
+    cfg: LUTConfig,
+    window: Optional[int] = None,
+    block_k: int = 128,
+    g_pad_min: int = 8,
+    lut_mode: str = "onehot",
+    exact_recip: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused entry: quantize -> QK^T -> LUT split-softmax -> PV in one kernel.
+
+    Takes the *float* query; ``s_q`` (absmax scale, a scalar reduction done by
+    the caller) rides in scalar prefetch and the int8 snap happens in VMEM at
+    ``ki == 0`` — no quantized-q HBM round-trip.  Bit-matches
+    ``quantize(q, s_q)`` + :func:`splitmax_decode_pallas` by construction.
+    """
+    return _dense_decode_call(
+        q, k_cache, v_cache, m_z, s_q, s_v, cache_len, exp_lut, recip_lut,
+        cfg=cfg, window=window, block_k=block_k, g_pad_min=g_pad_min,
+        lut_mode=lut_mode, exact_recip=exact_recip, interpret=interpret,
+        fused=True)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "window", "g_pad_min", "lut_mode", "exact_recip",
+                     "interpret"))
 def splitmax_decode_paged_pallas(
     q_q: jax.Array,            # (B, Hq, D) int8 — one new token per slot
     k_pages: jax.Array,        # (num_blocks, Hkv, block_k, D) int8 pool
@@ -309,12 +477,13 @@ def splitmax_decode_paged_pallas(
     *,
     cfg: LUTConfig,
     window: Optional[int] = None,
+    g_pad_min: int = 8,
     lut_mode: str = "onehot",
     exact_recip: bool = False,
     interpret: bool = False,
 ) -> jax.Array:
-    """Returns (B, Hq, D) float32 — decode attention gathered through the
-    block table.
+    """Composed paged entry — decode attention gathered through the block
+    table.
 
     The per-slot block indices ride in scalar prefetch next to ``lens_ref``;
     the K/V BlockSpec index maps read them, so each grid step DMAs exactly
@@ -322,60 +491,41 @@ def splitmax_decode_paged_pallas(
     (blocks are block_k-aligned), hence grid position ``ki`` maps 1:1 to the
     slot's ``ki``-th logical block.
     """
-    b, hq, d = q_q.shape
-    num_blocks, hkv, block_k, _ = k_pages.shape
-    _, max_blocks = block_table.shape
-    group = hq // hkv
-    g_pad = max(8, group)
+    return _paged_decode_call(
+        q_q, k_pages, v_pages, block_table, m_z, None, s_v, cache_len,
+        exp_lut, recip_lut, cfg=cfg, window=window, g_pad_min=g_pad_min,
+        lut_mode=lut_mode, exact_recip=exact_recip, interpret=interpret,
+        fused=False)
 
-    qg = q_q.reshape(b, hkv, group, d)
-    if g_pad != group:
-        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, g_pad - group), (0, 0)))
-    qf = qg.reshape(b * hkv, g_pad, d)
 
-    scalars = jnp.stack([
-        jnp.asarray(m_z, jnp.float32),
-        jnp.asarray(s_v, jnp.float32),
-        jnp.asarray(window if window is not None else 0, jnp.float32),
-        jnp.float32(0.0),
-    ])
-
-    kernel = functools.partial(
-        _paged_decode_kernel, cfg=cfg, hkv=hkv, block_k=block_k,
-        num_k_blocks=max_blocks, g_pad=g_pad, windowed=window is not None,
-        lut_mode=lut_mode, exact_recip=exact_recip)
-
-    def kv_index(bh, ki, lens_ref, table_ref, scalars_ref):
-        del lens_ref, scalars_ref
-        return (table_ref[bh // hkv, ki], bh % hkv, 0, 0)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
-        grid=(b * hkv, max_blocks),
-        in_specs=[
-            pl.BlockSpec((1, g_pad, d), lambda bh, ki, *_: (bh, 0, 0)),
-            pl.BlockSpec((1, 1, block_k, d), kv_index),
-            pl.BlockSpec((1, 1, block_k, d), kv_index),
-            pl.BlockSpec((256, 128), lambda *_: (0, 0)),
-            pl.BlockSpec((256, 128), lambda *_: (0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, g_pad, d), lambda bh, ki, *_: (bh, 0, 0)),
-        scratch_shapes=[
-            pltpu.VMEM((g_pad, d), jnp.float32),
-            pltpu.VMEM((g_pad, 128), jnp.float32),
-        ],
-    )
-
-    out = pl.pallas_call(
-        kernel,
-        grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b * hkv, g_pad, d), jnp.float32),
-        compiler_params=tpu_compiler_params(
-            dimension_semantics=("parallel", "arbitrary")),
-        interpret=interpret,
-    )(cache_len.astype(jnp.int32), block_table.astype(jnp.int32), scalars,
-      qf, k_pages, v_pages, _replicate_table(exp_lut),
-      _replicate_table(recip_lut))
-
-    out = out.reshape(b, hkv, g_pad, d)[:, :, :group, :]
-    return out.reshape(b, hq, d)
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "window", "g_pad_min", "lut_mode", "exact_recip",
+                     "interpret"))
+def splitmax_decode_fused_paged_pallas(
+    q: jax.Array,              # (B, Hq, D) float — one new token, UNquantized
+    k_pages: jax.Array,        # (num_blocks, Hkv, block_k, D) int8 pool
+    v_pages: jax.Array,        # (num_blocks, Hkv, block_k, D) int8 pool
+    block_table: jax.Array,    # (B, max_blocks) int32 — per-slot block ids
+    m_z: jax.Array,            # scalar f32
+    s_q: jax.Array,            # scalar f32 — q quantization scale (absmax)
+    s_v: jax.Array,            # scalar f32
+    cache_len: jax.Array,      # (B,) int32 — valid entries incl. current token
+    exp_lut: jax.Array,        # (256,) int32
+    recip_lut: jax.Array,      # (256,) int32
+    *,
+    cfg: LUTConfig,
+    window: Optional[int] = None,
+    g_pad_min: int = 8,
+    lut_mode: str = "onehot",
+    exact_recip: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused paged entry: in-kernel q quantization + block-table gather —
+    the full serving datapath (fp activations vs the paged int8 pool) in one
+    kernel launch."""
+    return _paged_decode_call(
+        q, k_pages, v_pages, block_table, m_z, s_q, s_v, cache_len,
+        exp_lut, recip_lut, cfg=cfg, window=window, g_pad_min=g_pad_min,
+        lut_mode=lut_mode, exact_recip=exact_recip, interpret=interpret,
+        fused=True)

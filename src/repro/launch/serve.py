@@ -341,6 +341,10 @@ def main(argv=None) -> None:
     ap.add_argument("--gen", type=int, default=24)
     ap.add_argument("--block-k", type=int, default=32)
     ap.add_argument("--cache", choices=("paged", "dense"), default="paged")
+    ap.add_argument("--fused", choices=("auto", "on", "off"), default="auto",
+                    help="fused decode datapath: quantize->QK^T->LUT->PV in "
+                         "one kernel (auto/on) vs the composed quantize + "
+                         "decode-kernel pipeline (off, A/B baseline)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -348,6 +352,9 @@ def main(argv=None) -> None:
     cfg = arch.smoke if args.smoke else arch.config
     if args.smoke:
         cfg = cfg.replace(dtype="float32")
+    # "auto" = fused on: the dispatch layer itself picks compiled Pallas on
+    # TPU and the bit-matching XLA twin elsewhere, so fused is always safe.
+    cfg = cfg.replace(attn_fused=(args.fused != "off"))
     assert cfg.family != "encdec", "use examples/serve_seamless.py for encdec"
 
     key = jax.random.PRNGKey(args.seed)

@@ -5,6 +5,13 @@ runs through :mod:`repro.core.attention` in whichever mode the config selects
 (float / fakequant / int8-LUT).  The KV cache is **int8 with static per-layer
 scales** — exactly the paper's decoder mapping, where K and V live in the CIM
 array in int8 and the current token streams against them (Eq. 3).
+
+Decode steps default to the **fused datapath** (``cfg.attn_fused``): the fp
+query goes straight into one kernel that quantizes it in VMEM, runs the int8
+QK^T tiles, the LUT split-softmax accumulation, and PV — the software mirror
+of the paper's never-leaves-the-array dual-banked macro.  Setting
+``attn_fused=False`` (or ``--fused off`` in serving) restores the composed
+quantize -> decode-kernel pipeline for A/B comparison.
 """
 from __future__ import annotations
 

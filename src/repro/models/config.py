@@ -60,6 +60,7 @@ class ModelConfig:
     scale_z: float = 8.0 / 127
     window: Optional[int] = None      # SWA
     attn_impl: str = "auto"
+    attn_fused: bool = True           # fused decode datapath (serve int8)
     # perf levers (§Perf hillclimb; defaults = paper-faithful baseline)
     attn_score_dtype: str = "float32"
     attn_triangular: bool = False
@@ -96,7 +97,8 @@ class ModelConfig:
         return AttentionSpec(
             mode=self.serve_attn_mode if serve else self.attn_mode,
             scale_z=self.scale_z, window=self.window, causal=True,
-            impl=self.attn_impl, score_dtype=self.attn_score_dtype,
+            impl=self.attn_impl, fused=self.attn_fused,
+            score_dtype=self.attn_score_dtype,
             triangular=self.attn_triangular)
 
     def replace(self, **kw) -> "ModelConfig":

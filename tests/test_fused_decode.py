@@ -1,0 +1,188 @@
+"""Property-based parity harness for the fused decode datapath.
+
+The fused kernel (fp q in, quantize-in-VMEM, int8 QK^T, LUT split-softmax,
+PV — one launch) must be indistinguishable from the composed pipeline it
+replaces.  Three layers of evidence, swept over a property grid of
+head_dim x cache_len x window x dense/paged where cache lengths are
+deliberately *not* multiples of ``block_k``:
+
+  * **bit-match on the integer path**: fused interpret == composed interpret
+    and fused XLA == composed XLA, ``array_equal`` — same int8 scores, same
+    int32 accumulation order, same LUT indices.
+  * **bounded LUT error on the softmax**: the reciprocal LUT (8 index bits)
+    is the only approximation the fused epilogue adds over exact division;
+    its error on the final output stays under 2^-8 relative.
+  * **autotune**: every tile the selection layer can hand the launcher is a
+    valid divisor, and swept winners actually override the heuristic.
+
+Falls back to ``tests/_hypothesis_stub.py`` when the real hypothesis package
+is absent (the container bakes in the jax toolchain only).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.core import paged_kv
+from repro.core import quantization as qlib
+from repro.core import split_softmax as ss
+from repro.core.lut import LUTConfig
+from repro.kernels import autotune, ops
+
+CFG = LUTConfig(scale_z=2.6 / 127)
+EXP_LUT, RECIP_LUT = ss.make_luts(CFG)
+S_Q, S_K, S_V = (jnp.float32(0.013), jnp.float32(0.011), jnp.float32(0.02))
+
+HEAD_DIMS = (32, 64, 128)
+BLOCK_K = 32
+S_MAX = 160            # 5 k-tiles of 32; drawn cache lens straddle them
+
+
+def _inputs(seed, d, b=2, hq=4, hkv=2):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(0, 0.5, (b, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.integers(-128, 128, (b, hkv, S_MAX, d)), jnp.int8)
+    v = jnp.asarray(rng.integers(-128, 128, (b, hkv, S_MAX, d)), jnp.int8)
+    return rng, q, k, v
+
+
+def _paged_from(rng, k, v):
+    """Scatter the dense caches into a shuffled pool (trash block = 0)."""
+    b, hkv, s_max, d = k.shape
+    mb = s_max // BLOCK_K
+    nb = 1 + b * mb
+    perm = rng.permutation(np.arange(1, nb)).reshape(b, mb)
+    kp = np.zeros((nb, hkv, BLOCK_K, d), np.int8)
+    vp = np.zeros((nb, hkv, BLOCK_K, d), np.int8)
+    for s in range(b):
+        for j in range(mb):
+            kp[perm[s, j]] = np.asarray(k[s, :, j * BLOCK_K:(j + 1) * BLOCK_K])
+            vp[perm[s, j]] = np.asarray(v[s, :, j * BLOCK_K:(j + 1) * BLOCK_K])
+    return jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(perm, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# dense: fused vs composed, bit-exact on both backends
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(min_value=0, max_value=2),      # head_dim index
+       st.integers(min_value=1, max_value=S_MAX),  # cache len (any residue)
+       st.integers(min_value=0, max_value=1),      # windowed?
+       st.integers(min_value=0, max_value=10_000))  # data seed
+def test_fused_dense_bitmatches_composed(di, max_len, windowed, seed):
+    d = HEAD_DIMS[di]
+    rng, q, k, v = _inputs(seed, d)
+    lens = jnp.asarray(rng.integers(1, max_len + 1, (2,)), jnp.int32)
+    window = 96 if windowed else None
+    q_q = qlib.quantize(q, S_Q)
+    for impl in ("interpret", "xla"):
+        composed = ops.splitmax_decode(
+            q_q, k, v, S_Q, S_K, S_V, lens, EXP_LUT, RECIP_LUT, cfg=CFG,
+            window=window, block_k=BLOCK_K, impl=impl)
+        fused = ops.splitmax_decode_fused(
+            q, k, v, S_Q, S_K, S_V, lens, EXP_LUT, RECIP_LUT, cfg=CFG,
+            window=window, block_k=BLOCK_K, impl=impl)
+        assert jnp.array_equal(composed, fused), (
+            f"{impl}: d={d} lens={lens.tolist()} window={window}")
+        assert bool(jnp.all(jnp.isfinite(fused)))
+
+
+# ---------------------------------------------------------------------------
+# paged: fused-through-the-table vs dense fused, bit-exact
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(min_value=0, max_value=2),
+       st.integers(min_value=1, max_value=S_MAX),
+       st.integers(min_value=0, max_value=10_000))
+def test_fused_paged_bitmatches_dense(di, max_len, seed):
+    d = HEAD_DIMS[di]
+    rng, q, k, v = _inputs(seed, d)
+    lens = jnp.asarray(rng.integers(1, max_len + 1, (2,)), jnp.int32)
+    kp, vp, table = _paged_from(rng, k, v)
+    for impl in ("interpret", "xla"):
+        dense = ops.splitmax_decode_fused(
+            q, k, v, S_Q, S_K, S_V, lens, EXP_LUT, RECIP_LUT, cfg=CFG,
+            block_k=BLOCK_K, impl=impl)
+        paged = ops.splitmax_decode_fused_paged(
+            q, kp, vp, table, S_Q, S_K, S_V, lens, EXP_LUT, RECIP_LUT,
+            cfg=CFG, impl=impl)
+        assert jnp.array_equal(dense, paged), (
+            f"{impl}: d={d} lens={lens.tolist()}")
+
+
+# ---------------------------------------------------------------------------
+# softmax epilogue: reciprocal-LUT error bound
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=2),
+       st.integers(min_value=0, max_value=10_000))
+def test_fused_recip_lut_error_bounded(di, seed):
+    """exact_recip=True isolates the reciprocal LUT: with 8 index bits the
+    mantissa quantization error is < 2^-8 relative, and it propagates
+    linearly to the normalized output."""
+    d = HEAD_DIMS[di]
+    rng, q, k, v = _inputs(seed, d)
+    lens = jnp.asarray(rng.integers(1, S_MAX + 1, (2,)), jnp.int32)
+    lut = ops.splitmax_decode_fused(
+        q, k, v, S_Q, S_K, S_V, lens, EXP_LUT, RECIP_LUT, cfg=CFG,
+        block_k=BLOCK_K, impl="interpret")
+    exact = ops.splitmax_decode_fused(
+        q, k, v, S_Q, S_K, S_V, lens, EXP_LUT, RECIP_LUT, cfg=CFG,
+        block_k=BLOCK_K, exact_recip=True, impl="interpret")
+    scale = float(jnp.max(jnp.abs(exact))) + 1e-9
+    err = float(jnp.max(jnp.abs(lut - exact))) / scale
+    assert err < 2.0 ** -8, f"recip-LUT error {err:.2e} at d={d}"
+
+
+# ---------------------------------------------------------------------------
+# production defaults: spec-level fused flag round trip
+# ---------------------------------------------------------------------------
+
+def test_decode_attention_fused_flag_same_numerics(rng):
+    """AttentionSpec(fused=True) (the default) and fused=False agree bitwise
+    through core.attention — flipping the serving flag is numerics-free."""
+    from repro.core import attention as core_attn
+    d = 64
+    _, q, k, v = _inputs(3, d)
+    lens = jnp.asarray([150, 37], jnp.int32)
+    outs = []
+    for fused in (True, False):
+        spec = core_attn.AttentionSpec(mode="int8", fused=fused,
+                                       impl="xla", block_k=BLOCK_K)
+        outs.append(core_attn.decode_attention(q, k, v, S_K, S_V, lens, spec))
+    assert jnp.array_equal(outs[0], outs[1])
+
+
+# ---------------------------------------------------------------------------
+# autotune: the selection layer itself
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(min_value=1, max_value=512),    # head_dim (any, odd too)
+       st.integers(min_value=1, max_value=8192))   # cache capacity
+def test_autotune_tiles_always_valid(head_dim, s_max):
+    bk, g_pad = autotune.decode_tile(head_dim, s_max)
+    assert s_max % bk == 0, (head_dim, s_max, bk)
+    assert bk <= s_max
+    assert g_pad >= 8
+
+
+def test_autotune_sweep_caches_winner():
+    autotune.clear_sweep_cache()
+    try:
+        timings = autotune.sweep_decode_tiles(32, 64, b=1, hq=2, hkv=1,
+                                              iters=1)
+        assert timings, "sweep returned no candidates"
+        winner = min(timings, key=timings.get)
+        assert autotune.decode_tile(32, 64) == winner
+        # a different shape still falls back to the heuristic
+        bk, g_pad = autotune.decode_tile(32, 128)
+        assert (bk, g_pad) == (autotune.heuristic_block_k(32, 128), 8)
+    finally:
+        autotune.clear_sweep_cache()

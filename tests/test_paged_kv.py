@@ -137,6 +137,54 @@ def test_paged_ref_equals_dense_ref_on_gathered_cache(rng):
     np.testing.assert_array_equal(np.asarray(paged), np.asarray(dense))
 
 
+def test_trash_block_tail_at_block_boundary(rng):
+    """A retired-adjacent edge: a slot whose table row *ends on the trash
+    block* (block 0) with cache_len landing exactly on a block boundary, so
+    the valid region touches the last owned block's final row and the trash
+    block contributes nothing.  The output must be invariant to whatever
+    garbage the trash block holds — checked on the gather_kv/XLA fallback
+    and the interpret kernel, for the composed and fused paged paths."""
+    b, hq, hkv, mb, d, bk = 2, 4, 2, 3, 64, 32
+    num_blocks = 1 + b * (mb - 1)
+    q1 = rng.integers(-128, 128, (b, hq, d)).astype(np.int8)
+    qf = jnp.asarray(rng.normal(0, 0.5, (b, hq, d)), jnp.float32)
+    kp = rng.integers(-128, 128, (num_blocks, hkv, bk, d)).astype(np.int8)
+    vp = rng.integers(-128, 128, (num_blocks, hkv, bk, d)).astype(np.int8)
+    # slots own 2 real blocks each; the third table entry is the trash block
+    table = jnp.asarray([[1, 2, paged_kv.TRASH_BLOCK],
+                         [3, 4, paged_kv.TRASH_BLOCK]], jnp.int32)
+    lens = jnp.asarray([2 * bk, 2 * bk], jnp.int32)  # exact block boundary
+
+    def run(trash_fill):
+        kp2, vp2 = kp.copy(), vp.copy()
+        kp2[paged_kv.TRASH_BLOCK] = trash_fill
+        vp2[paged_kv.TRASH_BLOCK] = trash_fill
+        kj, vj = jnp.asarray(kp2), jnp.asarray(vp2)
+        outs = {}
+        for impl in ("xla", "interpret"):
+            outs[f"composed.{impl}"] = ops.splitmax_decode_paged(
+                q1, kj, vj, table, *SCALES, lens, EXP_LUT, RECIP_LUT,
+                cfg=CFG, impl=impl)
+            outs[f"fused.{impl}"] = ops.splitmax_decode_fused_paged(
+                qf, kj, vj, table, *SCALES, lens, EXP_LUT, RECIP_LUT,
+                cfg=CFG, impl=impl)
+        return outs
+
+    a = run(np.int8(0))
+    bb = run(np.full((hkv, bk, d), 127, np.int8))   # worst-case garbage
+    for key in a:
+        np.testing.assert_array_equal(np.asarray(a[key]),
+                                      np.asarray(bb[key]),
+                                      err_msg=f"trash block leaked: {key}")
+    # and the gather itself must see exactly the two owned blocks
+    dense = ops.splitmax_decode(
+        q1, paged_kv.gather_kv(jnp.asarray(kp), table),
+        paged_kv.gather_kv(jnp.asarray(vp), table), *SCALES, lens,
+        EXP_LUT, RECIP_LUT, cfg=CFG, block_k=bk, impl="xla")
+    np.testing.assert_array_equal(np.asarray(a["composed.xla"]),
+                                  np.asarray(dense))
+
+
 # ------------------------ model: prefill + decode ---------------------------
 
 def _smoke_cfg():
