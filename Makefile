@@ -5,9 +5,12 @@
 # seconds instead of surfacing mid-suite, then the full run.
 #
 # `make bench-json` regenerates the committed perf baselines
-# (benchmarks/BENCH_serve.json, benchmarks/BENCH_attention.json);
-# `make perf-check` is the perf gate — it reruns the serving benchmark and
-# fails on a >15% tok/s regression against the committed baseline.
+# (benchmarks/BENCH_serve.json, BENCH_attention.json, BENCH_roofline.json);
+# `make perf-check` is the perf gate — it reruns the serving + kernel
+# benchmarks and the compile-only roofline, failing on a >15% regression
+# against the committed baselines or on any broken ratio property
+# (paged > dense, spec > paged, fused > composed, verify bytes < gamma
+# decodes).
 
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))

@@ -1,10 +1,18 @@
 """Perf regression gate: fresh benchmark runs vs the committed baselines.
 
-``make perf-check`` runs this.  Two gates, one per tracked artifact:
+``make perf-check`` runs this.  Three gates, one per tracked artifact:
 
-  * **serve** — re-runs the continuous-batching grid and fails on a >15%
-    tok/s regression against ``benchmarks/BENCH_serve.json``, or if the
-    paged scheduler no longer beats the dense baseline under churn.
+  * **serve** — re-runs the serving grid and fails on a >15% tok/s
+    regression against ``benchmarks/BENCH_serve.json``, if the paged
+    scheduler no longer beats the dense baseline under churn, if the
+    speculative scheduler (prefix drafter + fused multi-token verify) no
+    longer beats plain paged on the latency cell — the property the
+    verify kernel exists to deliver — or if speculative output stops
+    matching plain-paged greedy output token-for-token.
+  * **roofline** — recompiles the decode / draft-loop / fused-verify
+    launches and fails if one verify launch no longer moves fewer HBM
+    bytes than the gamma decode launches it replaces (compile-only HLO
+    accounting, machine-independent).
   * **attention** — re-runs the kernel microbenchmark grid and fails on a
     >15% us_per_call regression on any row of
     ``benchmarks/BENCH_attention.json`` (except the ``decode.composed_*``
@@ -29,6 +37,7 @@ THRESHOLD = float(os.environ.get("PERF_CHECK_THRESHOLD", "0.15"))
 BASE_DIR = pathlib.Path(__file__).parent
 SERVE_BASELINE = BASE_DIR / "BENCH_serve.json"
 ATTN_BASELINE = BASE_DIR / "BENCH_attention.json"
+ROOFLINE_BASELINE = BASE_DIR / "BENCH_roofline.json"
 
 # the committed artifact must demonstrate at least this fused speedup;
 # fresh runs only need fused>composed (machine noise tolerance)
@@ -40,10 +49,12 @@ def _check_serve() -> bool:
     from benchmarks import serve_bench
     fresh = serve_bench.run_grid(**{
         k: base["meta"][k] for k in
-        ("requests", "slots", "prompt_len", "gen", "block_k", "seed")})
+        ("requests", "slots", "prompt_len", "gen", "block_k", "seed",
+         "gamma", "spec_requests", "spec_slots", "target_layers",
+         "draft_layers") if k in base["meta"]})
 
     failed = False
-    for kind in ("dense", "paged"):
+    for kind in ("dense", "paged", "spec_paged", "speculative"):
         b, f = base[kind]["tok_s"], fresh[kind]["tok_s"]
         ratio = f / max(b, 1e-9)
         status = "ok"
@@ -51,13 +62,48 @@ def _check_serve() -> bool:
             status, failed = "REGRESSION", True
         print(f"perf-check [serve.{kind}] tok/s: baseline {b:.1f} -> fresh "
               f"{f:.1f} ({ratio:.2f}x)  {status}")
-    if fresh["paged_over_dense_tok_s"] <= 1.0:
-        print(f"perf-check: paged no longer beats dense under churn "
-              f"({fresh['paged_over_dense_tok_s']:.2f}x)  REGRESSION")
+    for name, key in (("paged/dense", "paged_over_dense_tok_s"),
+                      ("spec/paged", "spec_over_paged_tok_s")):
+        if fresh[key] <= 1.0:
+            print(f"perf-check: {name} = {fresh[key]:.2f}x <= 1  REGRESSION")
+            failed = True
+        else:
+            print(f"perf-check: {name} = {fresh[key]:.2f}x  ok")
+    b_acc = base["speculative"]["accept_rate"]
+    f_acc = fresh["speculative"]["accept_rate"]
+    status = "ok"
+    if f_acc < b_acc - 0.05:
+        # self-draft acceptance is a numerics property (scan vs unrolled
+        # compilation), not timing — a drop means the verify kernel or the
+        # scheduler changed behaviour, not that the host is busy
+        status, failed = "REGRESSION", True
+    print(f"perf-check [serve.speculative] accept: baseline {b_acc:.2f} -> "
+          f"fresh {f_acc:.2f}  {status}")
+    if not fresh["bitwise_parity"]:
+        print("perf-check [serve.speculative] output != plain-paged greedy "
+              "output  REGRESSION")
         failed = True
     else:
-        print(f"perf-check: paged/dense = "
-              f"{fresh['paged_over_dense_tok_s']:.2f}x  ok")
+        print("perf-check [serve.speculative] bitwise parity with plain "
+              "paged  ok")
+    return failed
+
+
+def _check_roofline() -> bool:
+    base = json.loads(ROOFLINE_BASELINE.read_text())
+    from benchmarks import roofline_bench
+    fresh = roofline_bench.run(**{
+        k: base["meta"][k] for k in
+        ("slots", "prompt_len", "gen", "block_k", "gamma")})
+
+    failed = False
+    for payload, tag in ((base, "baseline"), (fresh, "fresh")):
+        r = payload["verify_bytes_over_gamma_decodes"]
+        status = "ok"
+        if r >= 1.0:
+            status, failed = "REGRESSION", True
+        print(f"perf-check [roofline.{tag}] verify bytes / gamma decode "
+              f"launches = {r:.2f}x  {status}")
     return failed
 
 
@@ -112,7 +158,8 @@ def main() -> int:
     if "host_platform_device_count" not in flags:
         os.environ["XLA_FLAGS"] = (
             flags + " --xla_force_host_platform_device_count=8").strip()
-    missing = [p for p in (SERVE_BASELINE, ATTN_BASELINE) if not p.exists()]
+    missing = [p for p in (SERVE_BASELINE, ATTN_BASELINE, ROOFLINE_BASELINE)
+               if not p.exists()]
     if missing:
         print(f"perf-check: no committed baseline at "
               f"{', '.join(map(str, missing))}; "
@@ -121,6 +168,7 @@ def main() -> int:
 
     failed = _check_serve()
     failed |= _check_attention()
+    failed |= _check_roofline()
     return 1 if failed else 0
 
 

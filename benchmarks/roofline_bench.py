@@ -1,0 +1,81 @@
+"""Roofline accounting for the serving steps (compile-only, no execution).
+
+Lowers + compiles the three jitted serving launches on the CPU grid and runs
+:mod:`repro.launch.roofline` over the optimized HLO:
+
+  * ``decode``     — one token per slot per launch (the plain paged step)
+  * ``draft_loop`` — gamma scanned decode steps in one launch (the drafter)
+  * ``verify``     — gamma tokens per slot in ONE fused launch (the target)
+
+The point of the artifact is the ratio ``verify_bytes_over_gamma_decodes``:
+a verify launch covers the same gamma tokens as gamma decode launches but
+reads the weights (and the non-KV activations) once instead of gamma times,
+so its HBM traffic per emitted token is strictly lower — that is the
+machine-independent, HLO-level statement of why speculative decoding pays
+off on a memory-bound decode.  ``perf_check.py`` gates the ratio < 1.
+
+Everything here is abstract (``jax.eval_shape`` params/cache + AOT lower),
+so this costs one XLA compile per step and zero FLOPs.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+GAMMA = 4
+
+
+def run(slots: int = 8, prompt_len: int = 256, gen: int = 32,
+        block_k: int = 32, gamma: int = GAMMA) -> Dict:
+    from repro.configs import get_arch
+    from repro.launch import roofline as rl
+    from repro.launch import steps as st
+    from repro.models import transformer as T
+
+    cfg = get_arch("tinyllama_1p1b").smoke.replace(dtype="float32")
+    max_len = prompt_len + gen + gamma
+
+    params = jax.eval_shape(st.init_params_fn(cfg), jax.random.PRNGKey(0))
+    cache = jax.eval_shape(
+        lambda: T.make_paged_cache(cfg, slots, max_len, block_k=block_k))
+    tok = jax.ShapeDtypeStruct((slots,), jnp.int32)
+    toks = jax.ShapeDtypeStruct((slots, gamma), jnp.int32)
+
+    def _terms(fn, inputs, kind, seq):
+        compiled = jax.jit(fn).lower(params, inputs, cache).compile()
+        return rl.analyze(compiled, compiled.as_text(), cfg, kind,
+                          seq=seq, batch=slots, chips=1)
+
+    decode = _terms(st.make_decode_step(cfg), tok, "decode", max_len)
+    draft = _terms(st.make_draft_loop(cfg, gamma), tok, "prefill", gamma)
+    verify = _terms(st.make_verify_step(cfg), toks, "prefill", gamma)
+
+    g_dec_bytes = gamma * decode.hbm_bytes
+    g_dec_flops = gamma * decode.flops
+    return {
+        "meta": {"arch": cfg.name, "slots": slots, "prompt_len": prompt_len,
+                 "gen": gen, "block_k": block_k, "gamma": gamma,
+                 "max_len": max_len},
+        "decode": decode.summary(),
+        "draft_loop": draft.summary(),
+        "verify": verify.summary(),
+        # the speculative story, stated in HLO bytes: one fused verify
+        # launch vs the gamma sequential decode launches it replaces
+        "verify_bytes_over_gamma_decodes":
+            verify.hbm_bytes / max(g_dec_bytes, 1e-9),
+        "verify_flops_over_gamma_decodes":
+            verify.flops / max(g_dec_flops, 1e-9),
+        "draft_bytes_over_gamma_decodes":
+            draft.hbm_bytes / max(g_dec_bytes, 1e-9),
+    }
+
+
+def main() -> None:
+    import json
+    print(json.dumps(run(), indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -6,9 +6,12 @@ for timing benches, the metric itself for model-based benches).
 ``--json`` emits the tracked perf artifacts on the 8-CPU-device grid
 (set up before jax imports):
 
-  * ``benchmarks/BENCH_serve.json``     — paged vs dense serving under churn
-    (tok/s, p50/p99 decode-step latency, prefill counts, bytes moved)
+  * ``benchmarks/BENCH_serve.json``     — paged vs dense under churn plus
+    speculative vs plain paged on the latency cell (tok/s, p50/p99
+    decode-step latency, prefill counts, bytes moved, accept rate)
   * ``benchmarks/BENCH_attention.json`` — kernel microbenchmarks
+  * ``benchmarks/BENCH_roofline.json``  — compile-only HLO roofline of the
+    decode / draft-loop / fused-verify launches (why speculation pays)
 
 ``make perf-check`` diffs a fresh run against the committed baselines.
 
@@ -35,15 +38,32 @@ def _force_cpu_grid() -> None:
 
 def run_json(out_dir: pathlib.Path) -> None:
     _force_cpu_grid()
-    from benchmarks import attention_bench, serve_bench
+    from benchmarks import attention_bench, roofline_bench, serve_bench
 
     serve_json = serve_bench.run_grid()
     (out_dir / "BENCH_serve.json").write_text(
         json.dumps(serve_json, indent=2) + "\n")
+    spec = serve_json["speculative"]
     print(f"wrote {out_dir / 'BENCH_serve.json'}: "
-          f"dense {serve_json['dense']['tok_s']:.1f} tok/s, "
+          f"churn dense {serve_json['dense']['tok_s']:.1f} tok/s, "
           f"paged {serve_json['paged']['tok_s']:.1f} tok/s "
-          f"({serve_json['paged_over_dense_tok_s']:.2f}x)")
+          f"({serve_json['paged_over_dense_tok_s']:.2f}x); "
+          f"latency paged {serve_json['spec_paged']['tok_s']:.1f} tok/s, "
+          f"speculative {spec['tok_s']:.1f} tok/s "
+          f"({serve_json['spec_over_paged_tok_s']:.2f}x paged, "
+          f"accept {spec['accept_rate']:.2f}, "
+          f"{spec['tokens_per_verify']:.1f} tok/verify, "
+          f"parity={serve_json['bitwise_parity']})")
+
+    roof_json = roofline_bench.run()
+    (out_dir / "BENCH_roofline.json").write_text(
+        json.dumps(roof_json, indent=2) + "\n")
+    print(f"wrote {out_dir / 'BENCH_roofline.json'}: "
+          f"verify/gamma-decodes bytes "
+          f"{roof_json['verify_bytes_over_gamma_decodes']:.2f}x, "
+          f"flops {roof_json['verify_flops_over_gamma_decodes']:.2f}x, "
+          f"decode bottleneck "
+          f"{roof_json['decode']['bottleneck']}")
 
     rows = attention_bench.run()
     attn_json = {"rows": {name: {"us_per_call": val, "derived": derived}

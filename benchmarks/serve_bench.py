@@ -1,21 +1,37 @@
-"""Serving throughput under churn: paged vs dense KV-cache scheduler.
+"""Serving throughput: churn cell (dense vs paged) + latency cell (speculative).
 
-One grid cell — requests > slots with staggered generation lengths, so slots
-retire at different steps and the scheduler is constantly admitting.  This is
-exactly the regime where the dense baseline collapses (every admission
-re-prefills the whole batch) and the paged scheduler does a single-sequence
-prefill instead.  ``run_grid`` returns the JSON payload ``run.py --json``
-writes to ``BENCH_serve.json``; ``perf_check.py`` diffs fresh numbers
-against the committed baseline.
+Two committed cells, each measuring the regime its scheduler exists for:
 
-Both schedulers are warmed up (jitted steps compiled on throwaway inputs)
-before the clock starts, so tok/s measures serving, not XLA compilation, and
-each runs ``REPEATS`` times on the same compiled steps keeping the fastest
-run — best-of-N is what makes the perf gate robust to shared-host noise.
+* **churn** — requests > slots with staggered generation lengths, so slots
+  retire at different steps and the scheduler is constantly admitting.  The
+  dense baseline collapses here (every admission re-prefills the whole
+  batch); the paged scheduler does a single-sequence prefill instead.
+
+* **latency** — small slot count, deeper target: the regime speculative
+  decoding is for.  The target is an ``TARGET_LAYERS``-layer config whose
+  tail layers are zeroed — they contribute exactly 0 to the residual stream,
+  so the ``DRAFT_LAYERS``-layer prefix drafter (`serve.make_self_draft`)
+  agrees with the target at a realistic distilled-drafter accept rate while
+  costing a fraction per draft token.  The verify launch still does full
+  ``TARGET_LAYERS`` work (zeros are runtime params; XLA cannot fold them),
+  so the measured win is the real mechanism: gamma cheap draft steps + one
+  fused multi-token verify replacing gamma full decode launches.  The cell
+  also re-asserts the correctness contract: speculative output must equal
+  the plain paged greedy output token-for-token (``bitwise_parity``).
+
+``run_grid`` returns the JSON payload ``run.py --json`` writes to
+``BENCH_serve.json``; ``perf_check.py`` diffs fresh numbers against the
+committed baseline and gates spec > plain-paged.  ``--sweep`` explores the
+slots x block_k scheduler grid for the speculative cell.
+
+All rows are warmed (jitted steps compiled on throwaway inputs before the
+clock starts) and run ``REPEATS`` times keeping the fastest — best-of-N is
+what makes the perf gate robust to shared-host noise.
 """
 from __future__ import annotations
 
-from typing import Dict
+import argparse
+from typing import Dict, List, Sequence
 
 import jax
 import numpy as np
@@ -23,28 +39,75 @@ import numpy as np
 KEEP = ("tok_s", "p50_step_ms", "p99_step_ms", "decode_steps",
         "batch_prefills", "slot_prefills", "kv_bytes_per_step",
         "total_tokens", "served", "wall_s", "leaked_blocks")
+SPEC_KEEP = KEEP + ("accept_rate", "tokens_per_verify", "verify_steps",
+                    "draft_steps", "gamma")
 REPEATS = 3               # best-of-N; absorbs shared-host timing noise
+GAMMA = 8                 # draft tokens per speculative round
+TARGET_LAYERS = 8         # latency-cell target depth
+DRAFT_LAYERS = 1          # prefix drafter depth (target cost fraction 1/8)
 
 
-def run_grid(requests: int = 24, slots: int = 8, prompt_len: int = 256,
-             gen: int = 32, block_k: int = 32, seed: int = 0) -> Dict:
+def _prompts_gens(requests: int, prompt_len: int, gen: int, seed: int,
+                  vocab: int):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, vocab, prompt_len, dtype=np.int32)
+               for _ in range(requests)]
+    # staggered lengths in [gen/2, gen]: retirements never synchronize
+    gens = [int(g) for g in rng.integers(gen // 2, gen + 1, requests)]
+    return prompts, gens
+
+
+def _churn_setup(requests: int, prompt_len: int, gen: int, seed: int):
     from repro.configs import get_arch
-    from repro.launch import serve as srv
     from repro.launch import steps as st
 
     cfg = get_arch("tinyllama_1p1b").smoke.replace(dtype="float32")
     params = st.init_params_fn(cfg)(jax.random.PRNGKey(seed))
-    rng = np.random.default_rng(seed)
-    prompts = [rng.integers(0, cfg.vocab_size, prompt_len, dtype=np.int32)
-               for _ in range(requests)]
-    # staggered lengths in [gen/2, gen]: retirements never synchronize
-    gens = [int(g) for g in rng.integers(gen // 2, gen + 1, requests)]
+    prompts, gens = _prompts_gens(requests, prompt_len, gen, seed,
+                                  cfg.vocab_size)
+    return cfg, params, prompts, gens
+
+
+def _spec_setup(requests: int, prompt_len: int, gen: int, seed: int,
+                target_layers: int, draft_layers: int):
+    from repro.configs import get_arch
+    from repro.launch import serve as srv
+    from repro.launch import steps as st
+
+    cfg = get_arch("tinyllama_1p1b").smoke.replace(dtype="float32",
+                                                   n_layers=target_layers)
+    params = st.init_params_fn(cfg)(jax.random.PRNGKey(seed))
+    # identity tail: layers >= draft_layers contribute exactly 0 to the
+    # residual stream, so the prefix drafter tracks the target the way a
+    # distilled drafter would — while the verify launch still runs (and
+    # pays for) every layer
+    seg = jax.tree.map(
+        lambda a: a.at[draft_layers:].set(
+            jax.numpy.zeros_like(a[draft_layers:])),
+        params["segments"][0])
+    params = dict(params, segments=[seg])
+    drafter = srv.make_self_draft(params, cfg, draft_layers)
+    prompts, gens = _prompts_gens(requests, prompt_len, gen, seed,
+                                  cfg.vocab_size)
+    return cfg, params, drafter, prompts, gens
+
+
+def run_grid(requests: int = 24, slots: int = 8, prompt_len: int = 256,
+             gen: int = 32, block_k: int = 32, seed: int = 0,
+             gamma: int = GAMMA, spec_requests: int = 8,
+             spec_slots: int = 1, target_layers: int = TARGET_LAYERS,
+             draft_layers: int = DRAFT_LAYERS) -> Dict:
+    from repro.launch import serve as srv
 
     out: Dict = {"meta": {
-        "arch": cfg.name, "devices": jax.device_count(),
+        "arch": "tinyllama_1p1b/smoke", "devices": jax.device_count(),
         "requests": requests, "slots": slots, "prompt_len": prompt_len,
-        "gen": gen, "gens": gens, "block_k": block_k, "seed": seed,
+        "gen": gen, "block_k": block_k, "seed": seed, "gamma": gamma,
+        "spec_requests": spec_requests, "spec_slots": spec_slots,
+        "target_layers": target_layers, "draft_layers": draft_layers,
     }}
+
+    cfg, params, prompts, gens = _churn_setup(requests, prompt_len, gen, seed)
     for kind in ("dense", "paged"):
         stats = srv.serve(params, cfg, prompts, slots=slots, gen=gen,
                           gens=gens, cache_kind=kind, block_k=block_k,
@@ -52,4 +115,100 @@ def run_grid(requests: int = 24, slots: int = 8, prompt_len: int = 256,
         out[kind] = {k: stats[k] for k in KEEP if k in stats}
     out["paged_over_dense_tok_s"] = (
         out["paged"]["tok_s"] / max(out["dense"]["tok_s"], 1e-9))
+
+    scfg, sparams, drafter, sprompts, sgens = _spec_setup(
+        spec_requests, prompt_len, gen, seed, target_layers, draft_layers)
+    base = srv.serve(sparams, scfg, sprompts, slots=spec_slots, gen=gen,
+                     gens=sgens, cache_kind="paged", block_k=block_k,
+                     warmup=True, repeats=REPEATS)
+    spec = srv.serve(sparams, scfg, sprompts, slots=spec_slots, gen=gen,
+                     gens=sgens, cache_kind="paged", block_k=block_k,
+                     draft=drafter, gamma=gamma, warmup=True,
+                     repeats=REPEATS)
+    out["spec_paged"] = {k: base[k] for k in KEEP if k in base}
+    out["speculative"] = {k: spec[k] for k in SPEC_KEEP if k in spec}
+    out["spec_over_paged_tok_s"] = (
+        spec["tok_s"] / max(base["tok_s"], 1e-9))
+    # the correctness contract, re-checked on every bench run
+    out["bitwise_parity"] = spec["finished"] == base["finished"]
     return out
+
+
+def run_sweep(slots_list: Sequence[int] = (1, 2, 4),
+              block_ks: Sequence[int] = (16, 32, 64),
+              requests: int = 8, prompt_len: int = 256, gen: int = 32,
+              seed: int = 0, gamma: int = GAMMA) -> List[Dict]:
+    """Tuning sweep over the (slots x block_k) grid of the latency cell.
+
+    One row per cell per kind (plain paged, speculative); prints a table.
+    Unlike :func:`run_grid` (the tracked artifact) this is an exploration
+    tool — nothing is written or gated, the point is to see where the
+    scheduler knobs put the speculative crossover.
+    """
+    from repro.launch import serve as srv
+
+    cfg, params, drafter, prompts, gens = _spec_setup(
+        requests, prompt_len, gen, seed, TARGET_LAYERS, DRAFT_LAYERS)
+    rows: List[Dict] = []
+    for slots in slots_list:
+        for block_k in block_ks:
+            cell = {}
+            for kind, draft in (("paged", None), ("speculative", drafter)):
+                stats = srv.serve(
+                    params, cfg, prompts, slots=slots, gen=gen, gens=gens,
+                    cache_kind="paged", block_k=block_k, draft=draft,
+                    gamma=gamma, warmup=True, repeats=REPEATS)
+                row = {"kind": kind, "slots": slots, "block_k": block_k,
+                       "tok_s": stats["tok_s"],
+                       "p50_step_ms": stats["p50_step_ms"]}
+                if draft is not None:
+                    row["accept_rate"] = stats["accept_rate"]
+                    row["tokens_per_verify"] = stats["tokens_per_verify"]
+                rows.append(row)
+                cell[kind] = row
+                extra = (f"  accept={row['accept_rate']:.2f}"
+                         f" tok/verify={row['tokens_per_verify']:.2f}"
+                         if draft is not None else "")
+                print(f"sweep slots={slots} block_k={block_k:3d} "
+                      f"{kind:>11}: {row['tok_s']:7.1f} tok/s "
+                      f"p50 {row['p50_step_ms']:.1f} ms{extra}", flush=True)
+            ratio = (cell["speculative"]["tok_s"]
+                     / max(cell["paged"]["tok_s"], 1e-9))
+            print(f"sweep slots={slots} block_k={block_k:3d} "
+                  f"  spec/paged = {ratio:.2f}x", flush=True)
+    return rows
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--sweep", action="store_true",
+                    help="slots x block_k tuning sweep instead of the "
+                         "tracked grid")
+    ap.add_argument("--slots", type=int, nargs="+", default=None)
+    ap.add_argument("--block-k", type=int, nargs="+", default=None)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--prompt-len", type=int, default=256)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--gamma", type=int, default=GAMMA)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    if args.sweep:
+        run_sweep(slots_list=args.slots or (1, 2, 4),
+                  block_ks=args.block_k or (16, 32, 64),
+                  requests=args.requests or 8,
+                  prompt_len=args.prompt_len, gen=args.gen,
+                  seed=args.seed, gamma=args.gamma)
+        return
+
+    import json
+    out = run_grid(requests=args.requests or 24,
+                   slots=(args.slots or [8])[0],
+                   prompt_len=args.prompt_len, gen=args.gen,
+                   block_k=(args.block_k or [32])[0], seed=args.seed,
+                   gamma=args.gamma)
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

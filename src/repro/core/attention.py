@@ -136,7 +136,10 @@ def decode_attention(q: jax.Array, k_cache_q: jax.Array, v_cache_q: jax.Array,
         return out.astype(in_dtype)
 
     assert spec.mode == "int8", spec.mode
-    s_q = jax.lax.stop_gradient(qlib.absmax_scale(q))
+    # per-slot calibration: each batch row's quantization grid depends only
+    # on its own query, so continuous batching / speculative churn never
+    # perturbs a neighbouring slot's numerics.
+    s_q = jax.lax.stop_gradient(qlib.absmax_scale(q, axis=(1, 2)))  # (B,1,1)
     exp_lut, recip_lut = _luts_for(spec.scale_z)
     if spec.fused:
         # single-launch datapath: fp q enters the kernel, quantization
@@ -177,7 +180,7 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
                                 cache_len, spec)
 
     assert spec.mode == "int8", spec.mode
-    s_q = jax.lax.stop_gradient(qlib.absmax_scale(q))
+    s_q = jax.lax.stop_gradient(qlib.absmax_scale(q, axis=(1, 2)))  # (B,1,1)
     exp_lut, recip_lut = _luts_for(spec.scale_z)
     if spec.fused:
         out = ops.splitmax_decode_fused_paged(
@@ -191,4 +194,44 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
             s_q, s_k, s_v, cache_len, exp_lut, recip_lut, cfg=spec.lut_config,
             window=spec.window, lut_mode=spec.lut_mode,
             exact_recip=spec.exact_recip, impl=spec.impl)
+    return out.astype(in_dtype)
+
+
+def paged_verify_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_table: jax.Array,
+                           s_k: jax.Array, s_v: jax.Array,
+                           cache_len: jax.Array, spec: AttentionSpec
+                           ) -> jax.Array:
+    """(B,Hq,T,D) draft queries vs the paged int8 pool -> (B,Hq,T,D).
+
+    The speculative verify pass: all ``T`` draft tokens' K/V are already in
+    the pool (``cache_len`` counts them) and each query ``t`` attends up to
+    its own position — ``cache_len - (T-1) + t`` entries.  Per-(slot, token)
+    ``s_q[b, t]`` is the absmax scale of that slot's token-``t`` query slab,
+    exactly what the sequential decode would have computed for that slot at
+    that step; that, plus the per-token fallback inside
+    :func:`repro.kernels.ops`, is what makes the verify output bitwise
+    identical to ``T`` sequential decode steps.
+    """
+    in_dtype = q.dtype
+    t = q.shape[2]
+    if spec.mode in ("float", "fakequant"):
+        from repro.core import paged_kv
+        k_cache_q = paged_kv.gather_kv(k_pages, block_table)
+        v_cache_q = paged_kv.gather_kv(v_pages, block_table)
+        outs = [decode_attention(q[:, :, i, :], k_cache_q, v_cache_q,
+                                 s_k, s_v, cache_len - (t - 1 - i), spec)
+                for i in range(t)]
+        return jnp.stack(outs, axis=2).astype(in_dtype)
+
+    assert spec.mode == "int8", spec.mode
+    # (B, T): slot b / token i gets the absmax of its own query slab —
+    # exactly the per-slot scale the sequential decode computes at step i.
+    s_q = jax.lax.stop_gradient(
+        qlib.absmax_scale(q, axis=(1, 3))[:, 0, :, 0])
+    exp_lut, recip_lut = _luts_for(spec.scale_z)
+    out = ops.splitmax_decode_fused_verify_paged(
+        q, k_pages, v_pages, block_table, s_q, s_k, s_v, cache_len,
+        exp_lut, recip_lut, cfg=spec.lut_config, window=spec.window,
+        lut_mode=spec.lut_mode, exact_recip=spec.exact_recip, impl=spec.impl)
     return out.astype(in_dtype)

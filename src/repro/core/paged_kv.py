@@ -152,3 +152,78 @@ def release_slot(pool: Dict[str, jax.Array], slot: int
         block_table=pool["block_table"].at[slot].set(TRASH_BLOCK),
         length=pool["length"].at[slot].set(0),
     )
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: multi-token append + rejection rollback
+# ---------------------------------------------------------------------------
+
+def append_kv(pages: jax.Array, block_table: jax.Array, base_len: jax.Array,
+              vals: jax.Array) -> jax.Array:
+    """Scatter ``T`` new tokens per slot into the pool through the table.
+
+    ``vals (B, T, H, d)`` lands at logical positions ``base_len[b] + t``;
+    the block/offset pair for each position is read from the slot's table
+    row, so the write pattern is the T-token generalization of the decode
+    step's single tail-block write.  Positions are clamped to the table's
+    capacity so an over-run (retired-but-still-stepping) slot scribbles into
+    its last addressed cell — the trash block — instead of reading OOB.
+    """
+    b, t = vals.shape[:2]
+    mb = block_table.shape[1]
+    bk = pages.shape[2]
+    pos = jnp.minimum(base_len[:, None] + jnp.arange(t)[None, :],
+                      mb * bk - 1)                       # (B, T)
+    blk = jnp.take_along_axis(block_table, pos // bk, axis=1)
+    off = pos % bk
+    # advanced indices (blk, off) are non-adjacent, so the indexed result
+    # dims come first: value shape (B, T, H, d) matches vals directly
+    return pages.at[blk, :, off, :].set(vals)
+
+
+def rollback_slot(pool: Dict[str, jax.Array], slot: jax.Array,
+                  new_len: jax.Array) -> Dict[str, jax.Array]:
+    """Truncate one slot's logical length after a speculative rejection.
+
+    Device-side twin of the host allocator bookkeeping: the slot's length
+    drops to ``new_len`` and table entries past the last still-occupied
+    block are pointed at the trash block, so a later re-allocation of those
+    pool blocks can never be read through this slot's stale row.  Other
+    slots' rows are untouched.  The freed *ids* are returned to the
+    allocator by the host via :func:`tail_blocks`.
+    """
+    table = pool["block_table"]
+    bk = pool["k_pages"].shape[-2]
+    keep = (new_len + bk - 1) // bk                      # blocks still used
+    row = jnp.where(jnp.arange(table.shape[1]) < keep,
+                    table[slot], TRASH_BLOCK)
+    return dict(
+        pool,
+        block_table=table.at[slot].set(row),
+        length=pool["length"].at[slot].set(new_len),
+    )
+
+
+def tail_blocks(block_ids: Sequence[int], new_len: int,
+                block_k: int) -> List[int]:
+    """Host-side half of rejection rollback: the slot's reserved block ids
+    that lie entirely past ``new_len`` — i.e. what goes back to the
+    allocator's free list.  The trash block is never a reserved id, but is
+    filtered defensively anyway (freeing it would corrupt every retired
+    slot)."""
+    keep = blocks_per_seq(new_len, block_k)
+    return [int(i) for i in block_ids[keep:] if int(i) != TRASH_BLOCK]
+
+
+def truncate_lengths(pool: Dict[str, jax.Array], new_lens: jax.Array
+                     ) -> Dict[str, jax.Array]:
+    """Batch-wide logical-length truncation (speculative verify rollback).
+
+    Only the length vector moves: rejected tokens' K/V stay in the slot's
+    blocks as garbage past the logical end, masked out by every decode /
+    verify kernel and overwritten by the next append — the cheap common
+    case, where the slot keeps its block reservation.  Use
+    :func:`rollback_slot` + :func:`tail_blocks` when the blocks themselves
+    must return to the free list.
+    """
+    return dict(pool, length=new_lens.astype(jnp.int32))

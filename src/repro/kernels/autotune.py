@@ -79,6 +79,25 @@ def decode_tile(head_dim: int, s_max: int, impl: str = "auto"
     return heuristic_block_k(head_dim, s_max), 8
 
 
+def verify_tile(head_dim: int, s_max: int, gamma: int) -> Tuple[int, int]:
+    """(block_k, g_pad_min) for a gamma-token speculative verify.
+
+    The verify accumulator is ``(gamma * g_pad, D)`` — gamma times the
+    decode kernel's — so the VMEM budget that sized the decode k-tile
+    shrinks by the same factor: large gamma steps the heuristic down one
+    block-size notch.  Swept winners (exact (shape, gamma) match) win.
+    """
+    key = ("verify", head_dim, s_max, gamma, pallas_supported())
+    if key in _SWEEP_CACHE:
+        return _SWEEP_CACHE[key]
+    bk = heuristic_block_k(head_dim, s_max)
+    if gamma > 4:
+        smaller = [c for c in candidate_block_ks(s_max) if c < bk]
+        if smaller:
+            bk = max(smaller)
+    return bk, 8
+
+
 def clear_sweep_cache() -> None:
     _SWEEP_CACHE.clear()
 
@@ -142,21 +161,82 @@ def sweep_decode_tiles(head_dim: int, s_max: int, *, b: int = 4, hq: int = 4,
     return timings
 
 
+def sweep_verify_tiles(head_dim: int, s_max: int, gamma: int, *, b: int = 4,
+                       hq: int = 4, hkv: int = 2, iters: int = 3,
+                       seed: int = 0,
+                       g_pads: Tuple[int, ...] = CANDIDATE_G_PAD,
+                       verbose: bool = False
+                       ) -> Dict[Tuple[int, int], float]:
+    """Benchmark (block_k, g_pad_min) candidates for one verify shape.
+
+    Same protocol as :func:`sweep_decode_tiles` but against the
+    gamma-query verify kernel; winners land under a gamma-keyed cache
+    entry so :func:`verify_tile` picks them up on the next dispatch.
+    """
+    from repro.core import split_softmax as ss
+    from repro.core.lut import LUTConfig
+    from repro.kernels.splitmax_decode import (
+        splitmax_decode_fused_verify_pallas)
+
+    compiled = pallas_supported()
+    cfg = LUTConfig(scale_z=2.6 / 127)
+    exp_lut, recip_lut = ss.make_luts(cfg)
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(0, 0.5, (b, hq, gamma, head_dim)),
+                    jnp.float32)
+    k = jnp.asarray(rng.integers(-128, 128, (b, hkv, s_max, head_dim)),
+                    jnp.int8)
+    v = jnp.asarray(rng.integers(-128, 128, (b, hkv, s_max, head_dim)),
+                    jnp.int8)
+    lens = jnp.full((b,), s_max, jnp.int32)
+    m_z = jnp.full((gamma,), 1e-4, jnp.float32)
+    s_q = jnp.full((gamma,), 0.01, jnp.float32)
+    s_v = jnp.float32(0.02)
+
+    timings: Dict[Tuple[int, int], float] = {}
+    for block_k in candidate_block_ks(s_max):
+        for g_pad in g_pads:
+            def run(q, k, v, lens, _bk=block_k, _gp=g_pad):
+                return splitmax_decode_fused_verify_pallas(
+                    q, k, v, m_z, s_q, s_v, lens, exp_lut, recip_lut,
+                    cfg=cfg, block_k=_bk, g_pad_min=_gp,
+                    interpret=not compiled)
+            timings[(block_k, g_pad)] = _time_call(run, q, k, v, lens,
+                                                   iters=iters)
+            if verbose:
+                print(f"  block_k={block_k:4d} g_pad={g_pad:2d}  "
+                      f"{timings[(block_k, g_pad)] * 1e6:9.1f} us"
+                      f"  ({'pallas' if compiled else 'interpret'})")
+
+    winner = min(timings, key=timings.get)
+    _SWEEP_CACHE[("verify", head_dim, s_max, gamma, compiled)] = winner
+    return timings
+
+
 def main(argv=None) -> None:
     import argparse
     ap = argparse.ArgumentParser(
-        description="re-sweep decode tile sizes for one shape")
+        description="re-sweep decode/verify tile sizes for one shape")
     ap.add_argument("--head-dim", type=int, default=64)
     ap.add_argument("--seq-len", type=int, default=2048)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--iters", type=int, default=3)
+    ap.add_argument("--gamma", type=int, default=0,
+                    help="sweep the gamma-token verify kernel instead of "
+                         "the one-token decode kernel")
     args = ap.parse_args(argv)
-    print(f"sweeping decode tiles: head_dim={args.head_dim} "
+    kind = f"verify(gamma={args.gamma})" if args.gamma else "decode"
+    print(f"sweeping {kind} tiles: head_dim={args.head_dim} "
           f"s_max={args.seq_len} "
           f"({'compiled pallas' if pallas_supported() else 'interpret'})")
-    sweep_decode_tiles(args.head_dim, args.seq_len, b=args.batch,
-                       iters=args.iters, verbose=True)
-    bk, gp = decode_tile(args.head_dim, args.seq_len)
+    if args.gamma:
+        sweep_verify_tiles(args.head_dim, args.seq_len, args.gamma,
+                           b=args.batch, iters=args.iters, verbose=True)
+        bk, gp = verify_tile(args.head_dim, args.seq_len, args.gamma)
+    else:
+        sweep_decode_tiles(args.head_dim, args.seq_len, b=args.batch,
+                           iters=args.iters, verbose=True)
+        bk, gp = decode_tile(args.head_dim, args.seq_len)
     print(f"winner: block_k={bk} g_pad_min={gp}")
 
 

@@ -121,7 +121,9 @@ def _quantize_q_tile(q_f32, s_q):
 def _decode_kernel(
     # scalar prefetch
     lens_ref,               # SMEM (B,) int32 — valid cache length per batch
-    scalars_ref,            # SMEM (4,) f32 — [m_z, s_v, window, s_q]
+    scalars_ref,            # SMEM (2,) f32 — [s_v, window]
+    mz_ref,                 # SMEM (B,) f32 — per-slot requant multiplier
+    sq_ref,                 # SMEM (B,) f32 — per-slot q absmax scale (fused)
     # inputs
     q_ref,                  # (1, G_pad, D) int8 (composed) / f32 (fused)
     k_ref,                  # (1, block_k, D) int8
@@ -154,11 +156,11 @@ def _decode_kernel(
         s_ref[...] = jnp.zeros_like(s_ref)
         if fused:
             # quantize once per instance; every k-tile reuses the VMEM copy
-            qq_ref[...] = _quantize_q_tile(q_ref[0], scalars_ref[3])
+            qq_ref[...] = _quantize_q_tile(q_ref[0], sq_ref[b])
 
-    m_z = scalars_ref[0]
-    s_v = scalars_ref[1]
-    window = scalars_ref[2].astype(jnp.int32)
+    m_z = mz_ref[b]
+    s_v = scalars_ref[0]
+    window = scalars_ref[1].astype(jnp.int32)
     cache_len = lens_ref[b]
     k_start = ki * block_k
 
@@ -186,7 +188,9 @@ def _paged_decode_kernel(
     # scalar prefetch
     lens_ref,               # SMEM (B,) int32 — valid length per slot
     table_ref,              # SMEM (B, max_blocks) int32 — block table
-    scalars_ref,            # SMEM (4,) f32 — [m_z, s_v, window, s_q]
+    scalars_ref,            # SMEM (2,) f32 — [s_v, window]
+    mz_ref,                 # SMEM (B,) f32 — per-slot requant multiplier
+    sq_ref,                 # SMEM (B,) f32 — per-slot q absmax scale (fused)
     # inputs
     q_ref,                  # (1, G_pad, D) int8 (composed) / f32 (fused)
     k_ref,                  # (1, 1, block_k, D) int8 — pool tile via table
@@ -224,11 +228,11 @@ def _paged_decode_kernel(
         acc_ref[...] = jnp.zeros_like(acc_ref)
         s_ref[...] = jnp.zeros_like(s_ref)
         if fused:
-            qq_ref[...] = _quantize_q_tile(q_ref[0], scalars_ref[3])
+            qq_ref[...] = _quantize_q_tile(q_ref[0], sq_ref[b])
 
-    m_z = scalars_ref[0]
-    s_v = scalars_ref[1]
-    window = scalars_ref[2].astype(jnp.int32)
+    m_z = mz_ref[b]
+    s_v = scalars_ref[0]
+    window = scalars_ref[1].astype(jnp.int32)
     cache_len = lens_ref[b]
     k_start = ki * block_k
 
@@ -253,6 +257,98 @@ def _paged_decode_kernel(
 
 
 # ---------------------------------------------------------------------------
+# speculative verify kernels: gamma draft queries in one launch
+# ---------------------------------------------------------------------------
+
+def _per_row(values_ref, b, t_tokens: int, g_pad: int, dtype):
+    """(B, T) SMEM array -> slot b's (T*g_pad, 1) per-row column, t-major.
+
+    The verify kernels fold the gamma draft tokens onto the sublane dim
+    (row r belongs to token ``r // g_pad``), so per-(slot, token) scalars
+    (requant multiplier, quantization scale, causal length offsets) become
+    per-row broadcast columns.  T is static and tiny, so the unrolled
+    concat is cheap and keeps SMEM indexing static.
+    """
+    return jnp.concatenate(
+        [jnp.full((g_pad, 1), values_ref[b, t], dtype)
+         for t in range(t_tokens)],
+        axis=0)
+
+
+def _verify_body(lens_ref, scalars_ref, mz_ref, sq_ref, q_ref, k_ref, v_ref,
+                 exp_ref, recip_ref, out_ref, acc_ref, s_ref, qq_ref, *,
+                 cfg: LUTConfig, hkv: int, block_k: int, num_k_blocks: int,
+                 g_pad: int, t_tokens: int, windowed: bool, lut_mode: str,
+                 exact_recip: bool, k_tile, v_tile):
+    """Shared dense/paged verify-kernel body.
+
+    One instance serves a (batch, kv-head) pair for all ``t_tokens`` draft
+    queries at once: the q tile is (T*g_pad, D) with token t on rows
+    [t*g_pad, (t+1)*g_pad).  Query t may only see cache positions
+    ``< cache_len - (T-1-t)`` — its own K/V entry is the newest it attends
+    to — which is exactly the sequential decode's visibility at step t, so
+    each row bit-matches the one-token kernel on its effective length.
+    """
+    bh = pl.program_id(0)
+    ki = pl.program_id(1)
+    b = bh // hkv
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        # quantize all gamma queries once per instance, each row with its
+        # own slot's per-token absmax scale (the sequential path calibrates
+        # per slot per step)
+        qq_ref[...] = _quantize_q_tile(
+            q_ref[0], _per_row(sq_ref, b, t_tokens, g_pad, jnp.float32))
+
+    s_v = scalars_ref[0]
+    window = scalars_ref[1].astype(jnp.int32)
+    cache_len = lens_ref[b]
+    k_start = ki * block_k
+    rows = t_tokens * g_pad
+
+    # per-row effective length: token t sees cache_len - (T-1-t) positions
+    t_of_row = jax.lax.broadcasted_iota(jnp.int32, (rows, 1), 0) // g_pad
+    eff = cache_len - (t_tokens - 1) + t_of_row
+
+    live = k_start < cache_len          # max effective length (t = T-1)
+    if windowed:
+        # min effective length (t = 0) bounds the window's left edge
+        live = jnp.logical_and(
+            live,
+            k_start + block_k - 1 >= cache_len - (t_tokens - 1) - window)
+
+    @pl.when(live)
+    def _compute():
+        _accumulate_tile(
+            qq_ref[...], k_tile(k_ref), v_tile(v_ref),
+            m_z=_per_row(mz_ref, b, t_tokens, g_pad, jnp.float32),
+            cache_len=eff, k_start=k_start, window=window, windowed=windowed,
+            acc_ref=acc_ref, s_ref=s_ref, exp_ref=exp_ref, cfg=cfg,
+            g_pad=rows, block_k=block_k, lut_mode=lut_mode)
+
+    @pl.when(ki == num_k_blocks - 1)
+    def _finalize():
+        _finalize_tile(out_ref, acc_ref, s_ref, recip_ref, s_v=s_v,
+                       cfg=cfg, exact_recip=exact_recip)
+
+
+def _verify_kernel(lens_ref, scalars_ref, mz_ref, sq_ref, *refs, **kw):
+    return _verify_body(lens_ref, scalars_ref, mz_ref, sq_ref, *refs,
+                        k_tile=lambda r: r[0], v_tile=lambda r: r[0], **kw)
+
+
+def _paged_verify_kernel(lens_ref, table_ref, scalars_ref, mz_ref, sq_ref,
+                         *refs, **kw):
+    del table_ref  # consumed by the index maps, not the body
+    return _verify_body(lens_ref, scalars_ref, mz_ref, sq_ref, *refs,
+                        k_tile=lambda r: r[0, 0], v_tile=lambda r: r[0, 0],
+                        **kw)
+
+
+# ---------------------------------------------------------------------------
 # launchers (shared between composed int8 entry and fused fp entry)
 # ---------------------------------------------------------------------------
 
@@ -266,13 +362,33 @@ def _pad_q_groups(q, hkv: int, g_pad: int):
     return qg.reshape(b * hkv, g_pad, d)
 
 
-def _decode_scalars(m_z, s_v, window, s_q):
+def _sv_window_scalars(s_v, window):
     return jnp.stack([
-        jnp.asarray(m_z, jnp.float32),
         jnp.asarray(s_v, jnp.float32),
         jnp.asarray(window if window is not None else 0, jnp.float32),
-        jnp.asarray(s_q if s_q is not None else 0.0, jnp.float32),
     ])
+
+
+def _per_slot(v, b: int):
+    """Scalar / (1,) / (B,) -> (B,) f32 scalar-prefetch vector.
+
+    Serving calibrates ``s_q`` (hence ``m_z``) per slot so one slot's
+    quantization grid never depends on its batch neighbours; scalar callers
+    broadcast to identical per-slot values, bit-matching the old scalar
+    prefetch.
+    """
+    if v is None:
+        return jnp.zeros((b,), jnp.float32)
+    v = jnp.asarray(v, jnp.float32).reshape(-1)
+    return jnp.broadcast_to(v, (b,))
+
+
+def _per_slot_token(v, b: int, t: int):
+    """Scalar / (T,) / (B, T) -> (B, T) f32 for the verify kernels."""
+    v = jnp.asarray(v, jnp.float32)
+    if v.ndim < 2:
+        v = v.reshape(1, -1)
+    return jnp.broadcast_to(v, (b, t))
 
 
 def _dense_decode_call(q, k_cache, v_cache, m_z, s_q, s_v, cache_len,
@@ -304,7 +420,7 @@ def _dense_decode_call(q, k_cache, v_cache, m_z, s_q, s_v, cache_len,
         scratch.append(pltpu.VMEM((g_pad, d), jnp.int32))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=4,
         grid=(b * hkv, nk),
         in_specs=[
             pl.BlockSpec((1, g_pad, d), lambda bh, ki, *_: (bh, 0, 0)),
@@ -324,7 +440,8 @@ def _dense_decode_call(q, k_cache, v_cache, m_z, s_q, s_v, cache_len,
         compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
-    )(cache_len.astype(jnp.int32), _decode_scalars(m_z, s_v, window, s_q),
+    )(cache_len.astype(jnp.int32), _sv_window_scalars(s_v, window),
+      _per_slot(m_z, b), _per_slot(s_q, b),
       qf, kf, vf, _replicate_table(exp_lut), _replicate_table(recip_lut))
 
     out = out.reshape(b, hkv, g_pad, d)[:, :, :group, :]
@@ -349,8 +466,8 @@ def _paged_decode_call(q, k_pages, v_pages, block_table, m_z, s_q, s_v,
         num_k_blocks=max_blocks, g_pad=g_pad, windowed=window is not None,
         lut_mode=lut_mode, exact_recip=exact_recip, fused=fused)
 
-    def kv_index(bh, ki, lens_ref, table_ref, scalars_ref):
-        del lens_ref, scalars_ref
+    def kv_index(bh, ki, lens_ref, table_ref, *_):
+        del lens_ref
         return (table_ref[bh // hkv, ki], bh % hkv, 0, 0)
 
     scratch = [
@@ -361,7 +478,7 @@ def _paged_decode_call(q, k_pages, v_pages, block_table, m_z, s_q, s_v,
         scratch.append(pltpu.VMEM((g_pad, d), jnp.int32))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=5,
         grid=(b * hkv, max_blocks),
         in_specs=[
             pl.BlockSpec((1, g_pad, d), lambda bh, ki, *_: (bh, 0, 0)),
@@ -382,11 +499,136 @@ def _paged_decode_call(q, k_pages, v_pages, block_table, m_z, s_q, s_v,
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(cache_len.astype(jnp.int32), block_table.astype(jnp.int32),
-      _decode_scalars(m_z, s_v, window, s_q), qf, k_pages, v_pages,
+      _sv_window_scalars(s_v, window), _per_slot(m_z, b), _per_slot(s_q, b),
+      qf, k_pages, v_pages,
       _replicate_table(exp_lut), _replicate_table(recip_lut))
 
     out = out.reshape(b, hkv, g_pad, d)[:, :, :group, :]
     return out.reshape(b, hq, d)
+
+
+def _pad_verify_q(q, hkv: int, g_pad: int):
+    """(B, Hq, T, D) -> (B*Hkv, T*g_pad, D), token-major rows."""
+    b, hq, t, d = q.shape
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, t, d).transpose(0, 1, 3, 2, 4)
+    if g_pad != group:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, g_pad - group),
+                          (0, 0)))
+    return qg.reshape(b * hkv, t * g_pad, d)
+
+
+def _unpad_verify_out(out, b: int, hkv: int, group: int, t: int,
+                      g_pad: int, d: int):
+    out = out.reshape(b, hkv, t, g_pad, d)[:, :, :, :group, :]
+    return out.transpose(0, 1, 3, 2, 4).reshape(b, hkv * group, t, d)
+
+
+def _dense_verify_call(q, k_cache, v_cache, m_z, s_q, s_v, cache_len,
+                       exp_lut, recip_lut, *, cfg, window, block_k,
+                       g_pad_min, lut_mode, exact_recip, interpret):
+    b, hq, t, d = q.shape
+    _, hkv, s_max, _ = k_cache.shape
+    group = hq // hkv
+    g_pad = max(g_pad_min, 8, group)
+    assert s_max % block_k == 0, (s_max, block_k)
+    nk = s_max // block_k
+
+    qf = _pad_verify_q(q.astype(jnp.float32), hkv, g_pad)
+    kf = k_cache.reshape(b * hkv, s_max, d)
+    vf = v_cache.reshape(b * hkv, s_max, d)
+    rows = t * g_pad
+
+    kernel = functools.partial(
+        _verify_kernel, cfg=cfg, hkv=hkv, block_k=block_k, num_k_blocks=nk,
+        g_pad=g_pad, t_tokens=t, windowed=window is not None,
+        lut_mode=lut_mode, exact_recip=exact_recip)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(b * hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, rows, d), lambda bh, ki, *_: (bh, 0, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, ki, *_: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, ki, *_: (bh, ki, 0)),
+            pl.BlockSpec((256, 128), lambda *_: (0, 0)),
+            pl.BlockSpec((256, 128), lambda *_: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, d), lambda bh, ki, *_: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, d), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, d), jnp.int32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hkv, rows, d), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), _sv_window_scalars(s_v, window),
+      _per_slot_token(m_z, b, t), _per_slot_token(s_q, b, t),
+      qf, kf, vf, _replicate_table(exp_lut), _replicate_table(recip_lut))
+
+    return _unpad_verify_out(out, b, hkv, group, t, g_pad, d)
+
+
+def _paged_verify_call(q, k_pages, v_pages, block_table, m_z, s_q, s_v,
+                       cache_len, exp_lut, recip_lut, *, cfg, window,
+                       g_pad_min, lut_mode, exact_recip, interpret):
+    b, hq, t, d = q.shape
+    num_blocks, hkv, block_k, _ = k_pages.shape
+    _, max_blocks = block_table.shape
+    group = hq // hkv
+    g_pad = max(g_pad_min, 8, group)
+
+    qf = _pad_verify_q(q.astype(jnp.float32), hkv, g_pad)
+    rows = t * g_pad
+
+    kernel = functools.partial(
+        _paged_verify_kernel, cfg=cfg, hkv=hkv, block_k=block_k,
+        num_k_blocks=max_blocks, g_pad=g_pad, t_tokens=t,
+        windowed=window is not None, lut_mode=lut_mode,
+        exact_recip=exact_recip)
+
+    def kv_index(bh, ki, lens_ref, table_ref, *_):
+        del lens_ref
+        return (table_ref[bh // hkv, ki], bh % hkv, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(b * hkv, max_blocks),
+        in_specs=[
+            pl.BlockSpec((1, rows, d), lambda bh, ki, *_: (bh, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), kv_index),
+            pl.BlockSpec((1, 1, block_k, d), kv_index),
+            pl.BlockSpec((256, 128), lambda *_: (0, 0)),
+            pl.BlockSpec((256, 128), lambda *_: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, d), lambda bh, ki, *_: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((rows, d), jnp.float32),
+            pltpu.VMEM((rows, 128), jnp.float32),
+            pltpu.VMEM((rows, d), jnp.int32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hkv, rows, d), jnp.float32),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(cache_len.astype(jnp.int32), block_table.astype(jnp.int32),
+      _sv_window_scalars(s_v, window), _per_slot_token(m_z, b, t),
+      _per_slot_token(s_q, b, t), qf, k_pages, v_pages,
+      _replicate_table(exp_lut), _replicate_table(recip_lut))
+
+    return _unpad_verify_out(out, b, hkv, group, t, g_pad, d)
 
 
 # ---------------------------------------------------------------------------
@@ -401,7 +643,7 @@ def splitmax_decode_pallas(
     q_q: jax.Array,            # (B, Hq, D) int8 — one new token
     k_cache: jax.Array,        # (B, Hkv, S_max, D) int8
     v_cache: jax.Array,        # (B, Hkv, S_max, D) int8
-    m_z: jax.Array,            # scalar f32
+    m_z: jax.Array,            # scalar or (B,) f32 — per-slot requant mult
     s_v: jax.Array,            # scalar f32
     cache_len: jax.Array,      # (B,) int32 — valid entries incl. current token
     exp_lut: jax.Array,        # (256,) int32
@@ -431,8 +673,8 @@ def splitmax_decode_fused_pallas(
     q: jax.Array,              # (B, Hq, D) float — one new token, UNquantized
     k_cache: jax.Array,        # (B, Hkv, S_max, D) int8
     v_cache: jax.Array,        # (B, Hkv, S_max, D) int8
-    m_z: jax.Array,            # scalar f32
-    s_q: jax.Array,            # scalar f32 — q quantization scale (absmax)
+    m_z: jax.Array,            # scalar or (B,) f32 — per-slot requant mult
+    s_q: jax.Array,            # scalar or (B,) f32 — q absmax scale
     s_v: jax.Array,            # scalar f32
     cache_len: jax.Array,      # (B,) int32 — valid entries incl. current token
     exp_lut: jax.Array,        # (256,) int32
@@ -469,7 +711,7 @@ def splitmax_decode_paged_pallas(
     k_pages: jax.Array,        # (num_blocks, Hkv, block_k, D) int8 pool
     v_pages: jax.Array,        # (num_blocks, Hkv, block_k, D) int8 pool
     block_table: jax.Array,    # (B, max_blocks) int32 — per-slot block ids
-    m_z: jax.Array,            # scalar f32
+    m_z: jax.Array,            # scalar or (B,) f32 — per-slot requant mult
     s_v: jax.Array,            # scalar f32
     cache_len: jax.Array,      # (B,) int32 — valid entries incl. current token
     exp_lut: jax.Array,        # (256,) int32
@@ -507,8 +749,8 @@ def splitmax_decode_fused_paged_pallas(
     k_pages: jax.Array,        # (num_blocks, Hkv, block_k, D) int8 pool
     v_pages: jax.Array,        # (num_blocks, Hkv, block_k, D) int8 pool
     block_table: jax.Array,    # (B, max_blocks) int32 — per-slot block ids
-    m_z: jax.Array,            # scalar f32
-    s_q: jax.Array,            # scalar f32 — q quantization scale (absmax)
+    m_z: jax.Array,            # scalar or (B,) f32 — per-slot requant mult
+    s_q: jax.Array,            # scalar or (B,) f32 — q absmax scale
     s_v: jax.Array,            # scalar f32
     cache_len: jax.Array,      # (B,) int32 — valid entries incl. current token
     exp_lut: jax.Array,        # (256,) int32
@@ -529,3 +771,76 @@ def splitmax_decode_fused_paged_pallas(
         exp_lut, recip_lut, cfg=cfg, window=window, g_pad_min=g_pad_min,
         lut_mode=lut_mode, exact_recip=exact_recip, interpret=interpret,
         fused=True)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "window", "block_k", "g_pad_min", "lut_mode",
+                     "exact_recip", "interpret"))
+def splitmax_decode_fused_verify_pallas(
+    q: jax.Array,              # (B, Hq, T, D) float — gamma draft queries
+    k_cache: jax.Array,        # (B, Hkv, S_max, D) int8 — incl. the T tokens
+    v_cache: jax.Array,        # (B, Hkv, S_max, D) int8
+    m_z: jax.Array,            # (T,) or (B,T) f32 — per-token requant mults
+    s_q: jax.Array,            # (T,) or (B,T) f32 — per-token q scales
+    s_v: jax.Array,            # scalar f32
+    cache_len: jax.Array,      # (B,) int32 — length incl. ALL T verify tokens
+    exp_lut: jax.Array,        # (256,) int32
+    recip_lut: jax.Array,      # (256,) int32
+    *,
+    cfg: LUTConfig,
+    window: Optional[int] = None,
+    block_k: int = 128,
+    g_pad_min: int = 8,
+    lut_mode: str = "onehot",
+    exact_recip: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Speculative-verify entry: gamma draft tokens in ONE kernel launch.
+
+    The caller appends all T draft K/V entries to the cache first;
+    ``cache_len`` counts them.  Query t attends to ``cache_len - (T-1-t)``
+    positions — its own entry and everything older — via a per-row causal
+    mask, so every row reproduces the sequential one-token kernel bit for
+    bit.  The gamma queries are quantized once per (batch, kv-head) grid
+    instance (per-token scales ride scalar prefetch); K/V tiles stream
+    through the LUT split-softmax exactly once for all gamma outputs — no
+    per-token re-launch, no HBM intermediates.  Returns (B, Hq, T, D) f32.
+    """
+    return _dense_verify_call(
+        q, k_cache, v_cache, m_z, s_q, s_v, cache_len, exp_lut, recip_lut,
+        cfg=cfg, window=window, block_k=block_k, g_pad_min=g_pad_min,
+        lut_mode=lut_mode, exact_recip=exact_recip, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("cfg", "window", "g_pad_min", "lut_mode", "exact_recip",
+                     "interpret"))
+def splitmax_decode_fused_verify_paged_pallas(
+    q: jax.Array,              # (B, Hq, T, D) float — gamma draft queries
+    k_pages: jax.Array,        # (num_blocks, Hkv, block_k, D) int8 pool
+    v_pages: jax.Array,        # (num_blocks, Hkv, block_k, D) int8 pool
+    block_table: jax.Array,    # (B, max_blocks) int32
+    m_z: jax.Array,            # (T,) or (B,T) f32
+    s_q: jax.Array,            # (T,) or (B,T) f32
+    s_v: jax.Array,            # scalar f32
+    cache_len: jax.Array,      # (B,) int32 — length incl. ALL T verify tokens
+    exp_lut: jax.Array,        # (256,) int32
+    recip_lut: jax.Array,      # (256,) int32
+    *,
+    cfg: LUTConfig,
+    window: Optional[int] = None,
+    g_pad_min: int = 8,
+    lut_mode: str = "onehot",
+    exact_recip: bool = False,
+    interpret: bool = False,
+) -> jax.Array:
+    """Paged speculative-verify entry: the verify kernel above, with K/V
+    tiles (the cached history *and* the in-flight draft tokens' blocks)
+    gathered through the block table by the BlockSpec index map.  One
+    launch serves all gamma draft queries of every slot."""
+    return _paged_verify_call(
+        q, k_pages, v_pages, block_table, m_z, s_q, s_v, cache_len,
+        exp_lut, recip_lut, cfg=cfg, window=window, g_pad_min=g_pad_min,
+        lut_mode=lut_mode, exact_recip=exact_recip, interpret=interpret)

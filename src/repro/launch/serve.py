@@ -46,6 +46,40 @@ def _percentile(xs: List[float], p: float) -> float:
     return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
 
 
+def make_sampler(temperature: float, top_p: float, vocab_size: int):
+    """Jitted token selector: logits (B, V_padded) + key -> tokens (B,).
+
+    ``temperature == 0`` is greedy argmax — the default, the only mode the
+    speculative path supports (its acceptance rule compares against the
+    target argmax), and bit-identical to the pre-sampling scheduler.
+    Otherwise: temperature-scaled nucleus sampling; padding lanes are masked
+    before the softmax so they can never be drawn.
+    """
+    if temperature == 0.0:
+        @jax.jit
+        def greedy(logits, key):
+            del key
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return greedy
+
+    @jax.jit
+    def sample(logits, key):
+        lg = logits.astype(jnp.float32) / temperature
+        lane = jnp.arange(lg.shape[-1])
+        lg = jnp.where(lane >= vocab_size, -jnp.inf, lg)
+        if top_p < 1.0:
+            srt = jnp.sort(lg, axis=-1)[:, ::-1]
+            csum = jnp.cumsum(jax.nn.softmax(srt, axis=-1), axis=-1)
+            # smallest prefix with mass >= top_p; the top token always stays
+            keep = csum - jax.nn.softmax(srt, axis=-1) < top_p
+            cutoff = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1,
+                             keepdims=True)
+            lg = jnp.where(lg < cutoff, -jnp.inf, lg)
+        return jax.random.categorical(key, lg).astype(jnp.int32)
+
+    return sample
+
+
 def _finalize_stats(stats: Dict, finished: Dict, t0: float) -> Dict:
     dt = time.time() - t0
     total = sum(len(v) for v in finished.values())
@@ -64,16 +98,20 @@ def _finalize_stats(stats: Dict, finished: Dict, t0: float) -> Dict:
 def serve_paged(params, cfg, prompts: List[np.ndarray], *, slots: int,
                 gen: int, block_k: int = 32, max_len: Optional[int] = None,
                 gens: Optional[Sequence[int]] = None,
+                temperature: float = 0.0, top_p: float = 1.0,
+                sample_seed: int = 0,
                 warmup: bool = False, repeats: int = 1,
                 verbose: bool = False) -> Dict:
     """Paged scheduler; returns a stats dict (tok/s, latency, prefill counts,
     the generated sequences, and allocator accounting).
 
     ``gens`` optionally staggers per-request generation lengths (churn: slots
-    retire at different steps).  ``warmup=True`` compiles each jitted step on
-    throwaway inputs before the clock starts, so the stats measure serving,
-    not XLA compilation.  ``repeats > 1`` (benchmarking) reruns the whole
-    schedule with the same compiled steps and keeps the fastest run.
+    retire at different steps).  ``temperature``/``top_p`` select tokens via
+    :func:`make_sampler` (0.0 = greedy, the default).  ``warmup=True``
+    compiles each jitted step on throwaway inputs before the clock starts,
+    so the stats measure serving, not XLA compilation.  ``repeats > 1``
+    (benchmarking) reruns the whole schedule with the same compiled steps
+    and keeps the fastest run.
     """
     requests = len(prompts)
     prompt_len = len(prompts[0])
@@ -83,6 +121,7 @@ def serve_paged(params, cfg, prompts: List[np.ndarray], *, slots: int,
     if max_len is None:
         max_len = prompt_len + max(gens) + 8
     bps = paged_kv.blocks_per_seq(max_len, block_k)
+    sampler = make_sampler(temperature, top_p, cfg.vocab_size)
 
     # every step that rewrites the cache donates it — the pool is the big
     # buffer and must never be copied; slot indices are traced arrays so one
@@ -130,6 +169,14 @@ def serve_paged(params, cfg, prompts: List[np.ndarray], *, slots: int,
         # so repeats measure serving on warm executables
         cache = T.make_paged_cache(cfg, slots, max_len, block_k=block_k)
         alloc = paged_kv.BlockAllocator(1 + slots * bps)
+        kbox = [jax.random.PRNGKey(sample_seed)]
+
+        def select(logits):
+            if temperature == 0.0:
+                return sampler(logits, kbox[0])      # key unused
+            kbox[0], sub = jax.random.split(kbox[0])
+            return sampler(logits, sub)
+
         stats: Dict = {"batch_prefills": 0, "slot_prefills": 0,
                        "decode_steps": 0, "step_s": []}
         queue = list(range(requests))
@@ -151,7 +198,7 @@ def serve_paged(params, cfg, prompts: List[np.ndarray], *, slots: int,
                                    jnp.arange(slots, dtype=jnp.int32),
                                    block_ids)
         stats["batch_prefills"] += 1
-        tokens = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        tokens = select(last)
         for slot in range(slots):
             generated[active[slot]] = [int(tokens[slot])]
 
@@ -159,7 +206,7 @@ def serve_paged(params, cfg, prompts: List[np.ndarray], *, slots: int,
         while active:
             ts = time.perf_counter()
             logits, cache = decode_step(params, tokens, cache)
-            tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tokens = select(logits)
             tok_host = np.asarray(tokens)
             stats["step_s"].append(time.perf_counter() - ts)
             stats["decode_steps"] += 1
@@ -185,7 +232,7 @@ def serve_paged(params, cfg, prompts: List[np.ndarray], *, slots: int,
                     jnp.asarray([slot_blocks[slot]], jnp.int32))
                 stats["slot_prefills"] += 1
                 active[slot] = nid
-                first = int(jnp.argmax(last1[0]))
+                first = int(select(last1)[0])
                 generated[nid] = [first]
                 tokens = splice_token(tokens, jnp.int32(slot),
                                       jnp.int32(first))
@@ -211,6 +258,8 @@ def serve_paged(params, cfg, prompts: List[np.ndarray], *, slots: int,
 def serve_dense(params, cfg, prompts: List[np.ndarray], *, slots: int,
                 gen: int, max_len: Optional[int] = None,
                 gens: Optional[Sequence[int]] = None,
+                temperature: float = 0.0, top_p: float = 1.0,
+                sample_seed: int = 0,
                 warmup: bool = False, repeats: int = 1,
                 verbose: bool = False) -> Dict:
     """Pre-paged baseline scheduler: admission re-prefills the *entire*
@@ -224,6 +273,7 @@ def serve_dense(params, cfg, prompts: List[np.ndarray], *, slots: int,
     if max_len is None:
         max_len = prompt_len + max(gens) + 8
     seq_pad = prompt_len + max(gens)    # fixed re-prefill width (one trace)
+    sampler = make_sampler(temperature, top_p, cfg.vocab_size)
 
     prefill_step = jax.jit(st.make_prefill_step(cfg, max_len))
     decode_step = jax.jit(st.make_decode_step(cfg), donate_argnums=(2,))
@@ -250,6 +300,13 @@ def serve_dense(params, cfg, prompts: List[np.ndarray], *, slots: int,
         generated: Dict[int, List[int]] = {}
         finished: Dict[int, List[int]] = {}
         active: Dict[int, int] = {}
+        kbox = [jax.random.PRNGKey(sample_seed)]
+
+        def select(logits):
+            if temperature == 0.0:
+                return sampler(logits, kbox[0])      # key unused
+            kbox[0], sub = jax.random.split(kbox[0])
+            return sampler(logits, sub)
 
         t0 = time.time()
         for slot in range(slots):
@@ -258,14 +315,14 @@ def serve_dense(params, cfg, prompts: List[np.ndarray], *, slots: int,
                                             for s in range(slots)]))
         last, cache = prefill_step(params, {"tokens": prompts_arr})
         stats["batch_prefills"] += 1
-        tokens = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        tokens = select(last)
         for slot in range(slots):
             generated[active[slot]] = [int(tokens[slot])]
 
         while active:
             ts = time.perf_counter()
             logits, cache = decode_step(params, tokens, cache)
-            tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            tokens = select(logits)
             tok_host = np.asarray(tokens)
             stats["step_s"].append(time.perf_counter() - ts)
             stats["decode_steps"] += 1
@@ -294,7 +351,7 @@ def serve_dense(params, cfg, prompts: List[np.ndarray], *, slots: int,
                 last, cache = reprefill_step(params, jnp.asarray(seqs),
                                              jnp.asarray(lens))
                 stats["batch_prefills"] += 1
-                tokens = jnp.argmax(last, axis=-1).astype(jnp.int32)
+                tokens = select(last)
                 tok_host = np.asarray(tokens)
                 for slot, rid in active.items():
                     generated[rid].append(int(tok_host[slot]))
@@ -314,21 +371,326 @@ def serve_dense(params, cfg, prompts: List[np.ndarray], *, slots: int,
     return best
 
 
+def make_self_draft(params, cfg, n_layers: Optional[int] = None):
+    """Derive a drafter (params, cfg) from the target without new weights.
+
+    ``n_layers=None`` shares the full target — self-speculation, where
+    acceptance is 1.0 by construction and the measured speedup is pure
+    launch fusion (gamma scanned draft steps + one verify instead of gamma
+    dispatched decode steps).  An integer keeps only the first ``n_layers``
+    decoder blocks (a layer-prefix drafter sharing embed / final norm /
+    head — EdgeCIM's SLM-style cheap drafter, dense family only).
+    """
+    if n_layers is None:
+        return params, cfg
+    assert cfg.family == "dense", "layer-prefix drafter needs dense family"
+    assert 0 < n_layers <= cfg.n_layers, (n_layers, cfg.n_layers)
+    seg = jax.tree.map(lambda a: a[:n_layers], params["segments"][0])
+    return dict(params, segments=[seg]), cfg.replace(n_layers=n_layers)
+
+
+def serve_speculative(params, cfg, prompts: List[np.ndarray], *, slots: int,
+                      gen: int, gamma: int = 4,
+                      draft=None, block_k: int = 32,
+                      max_len: Optional[int] = None,
+                      gens: Optional[Sequence[int]] = None,
+                      warmup: bool = False, repeats: int = 1,
+                      verbose: bool = False) -> Dict:
+    """Greedy speculative scheduler, drafter-aware about cache sharing.
+
+    Per round, for every slot at once: the drafter runs ``gamma`` greedy
+    steps fused into one ``lax.scan`` launch (`steps.make_draft_loop`), the
+    target verifies ``[pending, drafts[:-1]]`` in one fused multi-token
+    launch (`steps.make_verify_step`), and the host accepts the longest
+    prefix where draft token == target argmax, then takes the target's
+    correction token.  Caches are truncated to the accepted prefix
+    (`paged_kv.truncate_lengths`) — the K/V for accepted tokens is already
+    bit-correct because the target itself wrote it during verify.
+
+    Cache layout depends on the drafter.  A *distinct* drafter gets its own
+    paged cache (its K/V comes from different weights), which doubles every
+    prefill / truncate / release.  Self-drafting (``draft=None``) shares
+    the target's cache: the draft loop appends its K/V at positions
+    ``len..len+gamma``, a length-only truncation rewinds to ``len``, and the
+    verify launch *overwrites* those same positions with target-computed
+    K/V before anything past ``len`` is ever read again — so after the
+    accept-truncation the cache holds exclusively target-written entries,
+    exactly as in the two-cache layout, at half the prefill/bookkeeping
+    cost and half the pool memory.
+
+    Correctness contract: emitted tokens are **bitwise identical** to the
+    non-speculative greedy path for *any* drafter, because every accepted
+    token is checked against (and every correction token is) the target's
+    own argmax at exactly the sequential cache state.  ``draft`` is a
+    ``(draft_params, draft_cfg)`` pair; ``None`` self-drafts with the full
+    target (see :func:`make_self_draft`).  Continuous batching (per-slot
+    retire + admit) matches :func:`serve_paged`.
+    """
+    self_draft = draft is None
+    draft_params, dcfg = draft if draft is not None else (params, cfg)
+    assert cfg.family in ("dense", "moe"), cfg.family
+    assert dcfg.family in ("dense", "moe"), dcfg.family
+    assert dcfg.vocab_size == cfg.vocab_size, "drafter must share the vocab"
+    requests = len(prompts)
+    prompt_len = len(prompts[0])
+    slots = min(slots, requests)
+    gens = list(gens) if gens is not None else [gen] * requests
+    assert len(gens) == requests
+    if max_len is None:
+        # +gamma: the cache briefly holds the unaccepted draft tail before
+        # the post-verify truncation
+        max_len = prompt_len + max(gens) + gamma + 8
+    bps = paged_kv.blocks_per_seq(max_len, block_k)
+
+    t_wave = jax.jit(st.make_paged_prefill_step(cfg, calibrate=True),
+                     donate_argnums=(2,))
+    t_slot = jax.jit(st.make_paged_prefill_step(cfg, calibrate=False),
+                     donate_argnums=(2,))
+    d_wave = d_slot = None
+    if not self_draft:
+        d_wave = jax.jit(st.make_paged_prefill_step(dcfg, calibrate=True),
+                         donate_argnums=(2,))
+        d_slot = jax.jit(st.make_paged_prefill_step(dcfg, calibrate=False),
+                         donate_argnums=(2,))
+    draft_loop = jax.jit(st.make_draft_loop(dcfg, gamma),
+                         donate_argnums=(2,))
+    verify_step = jax.jit(st.make_verify_step(cfg), donate_argnums=(2,))
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def truncate_step(cache, new_lens):
+        cache = dict(cache, length=new_lens)
+        cache["kv"] = paged_kv.truncate_lengths(cache["kv"], new_lens)
+        return cache
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def release_step(cache, slot):
+        cache = dict(cache, length=cache["length"].at[slot].set(0))
+        cache["kv"] = paged_kv.release_slot(cache["kv"], slot)
+        return cache
+
+    if warmup:
+        w_tok = jnp.asarray(np.stack([prompts[0]] * slots))
+        w_sids = jnp.arange(slots, dtype=jnp.int32)
+        w_blocks = jnp.arange(1, 1 + slots * bps,
+                              dtype=jnp.int32).reshape(slots, bps)
+        w_last, w_cache = t_wave(
+            params, w_tok, T.make_paged_cache(cfg, slots, max_len,
+                                              block_k=block_k),
+            w_sids, w_blocks)
+        w_pend = jnp.argmax(w_last, -1).astype(jnp.int32)
+        w_lens = jnp.full((slots,), prompt_len, jnp.int32)
+        if self_draft:
+            w_drafts, w_cache = draft_loop(params, w_pend, w_cache)
+            w_cache = truncate_step(w_cache, w_lens)
+        else:
+            _, w_dcache = d_wave(
+                draft_params, w_tok, T.make_paged_cache(dcfg, slots, max_len,
+                                                        block_k=block_k),
+                w_sids, w_blocks)
+            w_drafts, w_dcache = draft_loop(draft_params, w_pend, w_dcache)
+        w_in = jnp.concatenate([w_pend[:, None], w_drafts[:, :-1]], axis=1)
+        w_vlog, w_cache = verify_step(params, w_in, w_cache)
+        w_cache = truncate_step(w_cache, w_lens)
+        w_l1, w_cache = t_slot(params, jnp.asarray(prompts[0])[None],
+                               w_cache, jnp.asarray([0], jnp.int32),
+                               w_blocks[:1])
+        w_cache = release_step(w_cache, jnp.int32(0))
+        if not self_draft:
+            w_dcache = truncate_step(w_dcache, w_lens)
+            _, w_dcache = d_slot(draft_params, jnp.asarray(prompts[0])[None],
+                                 w_dcache, jnp.asarray([0], jnp.int32),
+                                 w_blocks[:1])
+            w_dcache = release_step(w_dcache, jnp.int32(0))
+        jax.block_until_ready((w_vlog, w_l1))
+
+    def _run() -> Dict:
+        cache = T.make_paged_cache(cfg, slots, max_len, block_k=block_k)
+        alloc = paged_kv.BlockAllocator(1 + slots * bps)
+        dcache = dalloc = None
+        if not self_draft:
+            dcache = T.make_paged_cache(dcfg, slots, max_len, block_k=block_k)
+            dalloc = paged_kv.BlockAllocator(1 + slots * bps)
+        stats: Dict = {"batch_prefills": 0, "slot_prefills": 0,
+                       "decode_steps": 0, "draft_steps": 0,
+                       "verify_steps": 0, "drafts_proposed": 0,
+                       "drafts_accepted": 0, "gamma": gamma,
+                       "slot_accept": {s: [0, 0] for s in range(slots)},
+                       "step_s": []}
+        queue = list(range(requests))
+        generated: Dict[int, List[int]] = {}
+        finished: Dict[int, List[int]] = {}
+        slot_blocks: Dict[int, List[int]] = {}
+        dslot_blocks: Dict[int, List[int]] = {}
+        active: Dict[int, int] = {}
+
+        t0 = time.time()
+        # ---- first wave: batched prefill (of BOTH models if distinct) ------
+        for slot in range(slots):
+            active[slot] = queue.pop(0)
+            slot_blocks[slot] = alloc.alloc(bps)
+            if not self_draft:
+                dslot_blocks[slot] = dalloc.alloc(bps)
+        slot_ids = jnp.arange(slots, dtype=jnp.int32)
+        tokens_in = jnp.asarray(np.stack([prompts[active[s]]
+                                          for s in range(slots)]))
+        last, cache = t_wave(params, tokens_in, cache, slot_ids,
+                             jnp.asarray(np.stack([slot_blocks[s]
+                                                   for s in range(slots)]),
+                                         jnp.int32))
+        stats["batch_prefills"] += 1
+        if not self_draft:
+            _, dcache = d_wave(draft_params, tokens_in, dcache, slot_ids,
+                               jnp.asarray(np.stack([dslot_blocks[s]
+                                                     for s in range(slots)]),
+                                           jnp.int32))
+            stats["batch_prefills"] += 1
+        pending = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        # host twin of the accepted-prefix lengths; for self-draft it is
+        # what rewinds the shared cache between draft append and verify
+        cur_lens = np.full((slots,), prompt_len, np.int32)
+        for slot in range(slots):
+            generated[active[slot]] = [int(pending[slot])]
+
+        # ---- draft -> verify -> accept rounds ------------------------------
+        while active:
+            ts = time.perf_counter()
+            if self_draft:
+                drafts, cache = draft_loop(params, pending, cache)
+                # length-only rewind: verify overwrites the draft K/V rows
+                cache = truncate_step(cache, jnp.asarray(cur_lens))
+            else:
+                drafts, dcache = draft_loop(draft_params, pending, dcache)
+            verify_in = jnp.concatenate([pending[:, None], drafts[:, :-1]],
+                                        axis=1)
+            vlogits, cache = verify_step(params, verify_in, cache)
+            targets = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)
+            drafts_h, targets_h = jax.device_get((drafts, targets))
+            stats["step_s"].append(time.perf_counter() - ts)
+            stats["draft_steps"] += 1
+            stats["verify_steps"] += 1
+
+            new_lens = np.zeros((slots,), np.int32)
+            pend_h = np.asarray(pending).copy()
+            retiring: List[int] = []
+            for slot in sorted(active):
+                rid = active[slot]
+                k = 0
+                while (k < gamma
+                       and drafts_h[slot, k] == targets_h[slot, k]):
+                    k += 1
+                if k < gamma:
+                    emit = [int(x) for x in drafts_h[slot, :k]]
+                    emit.append(int(targets_h[slot, k]))
+                else:
+                    emit = [int(x) for x in drafts_h[slot, :gamma]]
+                remaining = gens[rid] - len(generated[rid])
+                emit = emit[:remaining]
+                used_drafts = min(k, len(emit))
+                stats["drafts_proposed"] += gamma
+                stats["drafts_accepted"] += used_drafts
+                stats["slot_accept"][slot][0] += used_drafts
+                stats["slot_accept"][slot][1] += gamma
+                generated[rid].extend(emit)
+                pend_h[slot] = generated[rid][-1]
+                if len(generated[rid]) >= gens[rid]:
+                    retiring.append(slot)
+                else:
+                    new_lens[slot] = prompt_len + len(generated[rid]) - 1
+
+            # rollback to the accepted prefix in one shot; retiring /
+            # inactive slots truncate to zero
+            lens_dev = jnp.asarray(new_lens)
+            cache = truncate_step(cache, lens_dev)
+            if not self_draft:
+                dcache = truncate_step(dcache, lens_dev)
+            cur_lens = new_lens
+
+            for slot in retiring:
+                rid = active.pop(slot)
+                finished[rid] = generated.pop(rid)
+                alloc.free(slot_blocks.pop(slot))
+                cache = release_step(cache, jnp.int32(slot))
+                if not self_draft:
+                    dalloc.free(dslot_blocks.pop(slot))
+                    dcache = release_step(dcache, jnp.int32(slot))
+                if not queue:
+                    continue
+                nid = queue.pop(0)
+                slot_blocks[slot] = alloc.alloc(bps)
+                sid = jnp.asarray([slot], jnp.int32)
+                prompt = jnp.asarray(prompts[nid])[None]
+                last1, cache = t_slot(
+                    params, prompt, cache, sid,
+                    jnp.asarray([slot_blocks[slot]], jnp.int32))
+                stats["slot_prefills"] += 1
+                if not self_draft:
+                    dslot_blocks[slot] = dalloc.alloc(bps)
+                    _, dcache = d_slot(
+                        draft_params, prompt, dcache, sid,
+                        jnp.asarray([dslot_blocks[slot]], jnp.int32))
+                    stats["slot_prefills"] += 1
+                active[slot] = nid
+                first = int(jnp.argmax(last1[0]))
+                generated[nid] = [first]
+                pend_h[slot] = first
+                cur_lens[slot] = prompt_len
+            pending = jnp.asarray(pend_h)
+
+        stats["leaked_blocks"] = alloc.live_count + (
+            dalloc.live_count if dalloc is not None else 0)
+        stats["finished"] = finished
+        stats["accept_rate"] = (stats["drafts_accepted"]
+                                / max(stats["drafts_proposed"], 1))
+        total_emitted = sum(len(v) for v in finished.values()) - len(finished)
+        stats["tokens_per_verify"] = (total_emitted
+                                      / max(stats["verify_steps"], 1))
+        stats["slot_accept"] = {
+            s: (a / max(p, 1)) for s, (a, p) in stats["slot_accept"].items()}
+        nl = cfg.n_layers
+        mean_gen = sum(gens) // (2 * len(gens))
+        mean_blocks = paged_kv.blocks_per_seq(prompt_len + mean_gen, block_k)
+        stats["kv_bytes_per_step"] = (2 * nl * slots * cfg.n_kv_heads
+                                      * mean_blocks * block_k * cfg.hd)
+        return _finalize_stats(stats, finished, t0)
+
+    best = _run()
+    for _ in range(repeats - 1):
+        run = _run()
+        if run["tok_s"] > best["tok_s"]:
+            best = run
+    return best
+
+
 def serve(params, cfg, prompts: List[np.ndarray], *, slots: int, gen: int,
           cache_kind: str = "paged", block_k: int = 32,
           max_len: Optional[int] = None,
           gens: Optional[Sequence[int]] = None,
+          gamma: int = 4, draft=None,
+          temperature: float = 0.0, top_p: float = 1.0,
           warmup: bool = False, repeats: int = 1,
           verbose: bool = False) -> Dict:
-    """Dispatch on the cache layout; see :func:`serve_paged`."""
+    """Dispatch on the cache layout / speculative mode; see
+    :func:`serve_paged` and :func:`serve_speculative`.  ``draft`` switches
+    to the speculative scheduler (greedy only; paged caches only)."""
+    if draft is not None:
+        assert cache_kind == "paged", "speculative serving is paged-only"
+        assert temperature == 0.0, "speculative serving is greedy-only"
+        draft_pair = None if draft == "self" else draft
+        return serve_speculative(params, cfg, prompts, slots=slots, gen=gen,
+                                 gamma=gamma, draft=draft_pair,
+                                 block_k=block_k, max_len=max_len, gens=gens,
+                                 warmup=warmup, repeats=repeats,
+                                 verbose=verbose)
     if cache_kind == "paged":
         return serve_paged(params, cfg, prompts, slots=slots, gen=gen,
                            block_k=block_k, max_len=max_len, gens=gens,
+                           temperature=temperature, top_p=top_p,
                            warmup=warmup, repeats=repeats, verbose=verbose)
     assert cache_kind == "dense", cache_kind
     return serve_dense(params, cfg, prompts, slots=slots, gen=gen,
-                       max_len=max_len, gens=gens, warmup=warmup,
-                       repeats=repeats, verbose=verbose)
+                       max_len=max_len, gens=gens, temperature=temperature,
+                       top_p=top_p, warmup=warmup, repeats=repeats,
+                       verbose=verbose)
 
 
 def main(argv=None) -> None:
@@ -345,6 +707,20 @@ def main(argv=None) -> None:
                     help="fused decode datapath: quantize->QK^T->LUT->PV in "
                          "one kernel (auto/on) vs the composed quantize + "
                          "decode-kernel pipeline (off, A/B baseline)")
+    ap.add_argument("--draft", default=None,
+                    help="speculative decoding drafter: an arch name "
+                         "(independent weights), 'self' (share the target "
+                         "weights; acceptance 1.0, measures launch fusion), "
+                         "or 'self:N' (first N target layers). Greedy + "
+                         "paged only; output tokens are bitwise identical "
+                         "to the plain greedy path")
+    ap.add_argument("--gamma", type=int, default=4,
+                    help="draft tokens per speculative round")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature; 0 = greedy (default; "
+                         "required under --draft)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (only with --temperature)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -363,15 +739,38 @@ def main(argv=None) -> None:
     prompts = [rng.integers(0, cfg.vocab_size, args.prompt_len,
                             dtype=np.int32) for _ in range(args.requests)]
 
+    draft = args.draft
+    if draft and draft != "self":
+        if draft.startswith("self:"):
+            draft = make_self_draft(params, cfg, int(draft.split(":", 1)[1]))
+        else:
+            darch = get_arch(draft)
+            dcfg = darch.smoke if args.smoke else darch.config
+            if args.smoke:
+                dcfg = dcfg.replace(dtype="float32")
+            dcfg = dcfg.replace(attn_fused=(args.fused != "off"))
+            dparams = st.init_params_fn(dcfg)(jax.random.PRNGKey(
+                args.seed + 1))
+            draft = (dparams, dcfg)
+
     stats = serve(params, cfg, prompts, slots=args.slots, gen=args.gen,
-                  cache_kind=args.cache, block_k=args.block_k, verbose=True)
-    print(f"[{args.cache}] served {stats['served']} requests, "
+                  cache_kind=args.cache, block_k=args.block_k,
+                  gamma=args.gamma, draft=draft,
+                  temperature=args.temperature, top_p=args.top_p,
+                  verbose=True)
+    mode = f"{args.cache}+spec" if args.draft else args.cache
+    print(f"[{mode}] served {stats['served']} requests, "
           f"{stats['total_tokens']} tokens in {stats['wall_s']:.2f}s "
           f"({stats['tok_s']:.1f} tok/s, {stats['decode_steps']} decode "
           f"steps, {stats['batch_prefills']} batch + "
           f"{stats['slot_prefills']} slot prefills, "
           f"p50/p99 step {stats['p50_step_ms']:.1f}/"
           f"{stats['p99_step_ms']:.1f} ms)", flush=True)
+    if args.draft:
+        print(f"  speculative: gamma={stats['gamma']} "
+              f"accept_rate={stats['accept_rate']:.2f} "
+              f"tokens_per_verify={stats['tokens_per_verify']:.2f} "
+              f"({stats['verify_steps']} verify rounds)", flush=True)
     for rid in sorted(stats["finished"]):
         print(f"  req {rid}: {stats['finished'][rid][:8]}...")
 

@@ -187,6 +187,47 @@ def make_decode_step(cfg: ModelConfig):
     return decode_step
 
 
+def make_verify_step(cfg: ModelConfig):
+    """(params, tokens (B,T), cache) -> (logits (B,T,V), cache).
+
+    The speculative target step: one fused multi-token launch whose
+    ``logits[:, t]`` is bitwise what ``make_decode_step`` would have
+    produced after accepting ``tokens[:, :t+1]`` (paged caches only).
+    """
+    assert cfg.family != "encdec", "speculative serving is decoder-only"
+
+    def verify_step(params, tokens, cache):
+        return T.verify_step(params, tokens, cfg, cache)
+
+    return verify_step
+
+
+def make_draft_loop(cfg: ModelConfig, gamma: int):
+    """(params, token (B,), cache) -> (drafts (B, gamma), cache).
+
+    The drafter's gamma greedy decode steps fused into one ``lax.scan`` so
+    a whole draft burst is a single jitted launch — on launch-bound hosts
+    that is the difference between speculative decoding paying for itself
+    and losing to per-step dispatch overhead.  ``drafts[:, 0]`` is the
+    drafter's continuation of ``token``; the cache comes back gamma tokens
+    longer and is truncated by the scheduler after verification.
+    """
+    assert cfg.family != "encdec", "speculative serving is decoder-only"
+
+    def draft_loop(params, token, cache):
+        def body(carry, _):
+            tok, cache = carry
+            logits, cache = T.decode_step(params, tok, cfg, cache)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return (nxt, cache), nxt
+
+        (_, cache), drafts = jax.lax.scan(body, (token, cache), None,
+                                          length=gamma)
+        return drafts.T, cache                      # (B, gamma)
+
+    return draft_loop
+
+
 def init_params_fn(cfg: ModelConfig):
     if cfg.family == "encdec":
         return functools.partial(E.init_params, cfg=cfg)

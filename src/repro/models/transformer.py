@@ -158,6 +158,23 @@ def _block_decode_paged(params, x, cache_slice, cfg: ModelConfig, kind: str
     return x, dict(cache_slice, kv=new_kv)
 
 
+def _block_verify_paged(params, x, cache_slice, cfg: ModelConfig, kind: str
+                        ) -> Tuple[jax.Array, Dict]:
+    """T-token speculative-verify block step against the paged pool slice."""
+    norm = _norm(cfg)
+    h = norm(params["norm1"], x)
+    attn_out, new_kv = A.attn_block_verify_paged(params["attn"], h,
+                                                 cache_slice["kv"], cfg)
+    x = x + attn_out
+    h = norm(params["norm2"], x)
+    if kind == "dense":
+        x = x + M.mlp_apply(params["mlp"], h, cfg)
+    else:
+        out, _ = MOE.moe_apply(params["moe"], h, cfg)
+        x = x + out
+    return x, dict(cache_slice, kv=new_kv)
+
+
 def _layer_kinds(cfg: ModelConfig):
     """(kind, count) segments, in order.  Homogeneous segments get scanned."""
     if cfg.family == "dense":
@@ -615,6 +632,62 @@ def _decode_segment(seg_params, x, cfg, kind, n, offset, cache):
     cache = dict(cache, ssm=dict(ssc,
                                  conv=ssc["conv"].at[sl].set(conv),
                                  h=ssc["h"].at[sl].set(h)))
+    return x, cache
+
+
+def verify_step(params, tokens, cfg: ModelConfig, cache: Dict
+                ) -> Tuple[jax.Array, Dict]:
+    """Speculative verify: tokens (B, T) -> logits (B, T, vocab_padded).
+
+    The paged-cache, T-token twin of :func:`decode_step`: every layer
+    appends all T tokens' K/V through the block table and runs the fused
+    verify attention with per-token causal lengths, so ``logits[:, t]`` is
+    bitwise what ``decode_step`` would have produced after accepting
+    ``tokens[:, :t+1]``.  The cache comes back T tokens longer; the
+    scheduler truncates it to the accepted prefix via
+    ``paged_kv.truncate_lengths``.  Paged dense/moe families only.
+    """
+    if cfg.family not in ("dense", "moe"):
+        raise NotImplementedError(
+            f"speculative verify supports paged dense/moe, not {cfg.family}")
+    t = tokens.shape[1]
+    x = embed_tokens(params, tokens, cfg)               # (B, T, d)
+    segs = _layer_kinds(cfg)
+    offset = 0
+    for seg_params, (kind, n) in zip(params["segments"], segs):
+        x, cache = _verify_segment(seg_params, x, cfg, kind, n, offset,
+                                   cache)
+        offset += n
+    cache = dict(cache, length=cache["length"] + t)
+    cache["kv"] = dict(cache["kv"], length=cache["kv"]["length"] + t)
+    return unembed(params, x, cfg), cache
+
+
+def _verify_segment(seg_params, x, cfg, kind, n, offset, cache):
+    """Scan one dense/moe segment in T-token verify mode (paged pool)."""
+    kvc = cache["kv"]
+    if "k_pages" not in kvc:
+        raise NotImplementedError("speculative verify needs the paged cache")
+    sl = slice(offset, offset + n)
+
+    def body(x, xs):
+        layer_params, kp, vp, s_k, s_v = xs
+        slice_ = {"kv": {"k_pages": kp, "v_pages": vp,
+                         "scale_k": s_k, "scale_v": s_v,
+                         "block_table": kvc["block_table"],
+                         "length": kvc["length"]}}
+        x, new_slice = _block_verify_paged(layer_params, x, slice_, cfg,
+                                           kind)
+        nkv = new_slice["kv"]
+        return x, (nkv["k_pages"], nkv["v_pages"])
+
+    x, (kp, vp) = maybe_scan(
+        body, x, (seg_params, kvc["k_pages"][sl], kvc["v_pages"][sl],
+                  kvc["scale_k"][sl], kvc["scale_v"][sl]), cfg)
+    cache = dict(cache, kv=dict(
+        kvc,
+        k_pages=kvc["k_pages"].at[sl].set(kp),
+        v_pages=kvc["v_pages"].at[sl].set(vp)))
     return x, cache
 
 

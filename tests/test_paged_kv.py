@@ -270,3 +270,115 @@ def test_serve_admission_is_per_slot_only(rng):
     assert stats["leaked_blocks"] == 0
     assert sorted(stats["finished"]) == [0, 1, 2, 3, 4]
     assert all(len(v) == 4 for v in stats["finished"].values())
+
+
+# ---------------- speculative: append / rollback / truncate -----------------
+
+def test_append_kv_addressing(rng):
+    """T new tokens land at base_len[b]+t through the table; everything
+    else — earlier positions, other slots' blocks, the trash block — is
+    byte-identical before and after."""
+    nb, h, bk, d, t = 7, 2, 8, 4, 3
+    pages = jnp.asarray(rng.integers(-128, 128, (nb, h, bk, d)), jnp.int8)
+    table = jnp.asarray([[2, 5, 1], [6, 3, 4]], jnp.int32)
+    base = jnp.asarray([5, 14], jnp.int32)        # non-block-aligned starts
+    vals = jnp.asarray(rng.integers(-128, 128, (2, t, h, d)), jnp.int8)
+    out = np.asarray(paged_kv.append_kv(pages, table, base, vals))
+
+    touched = set()
+    for s in range(2):
+        for i in range(t):
+            p = int(base[s]) + i
+            blk, off = int(table[s, p // bk]), p % bk
+            np.testing.assert_array_equal(out[blk, :, off, :],
+                                          np.asarray(vals[s, i]))
+            touched.add((blk, off))
+    before = np.asarray(pages)
+    for blk in range(nb):
+        for off in range(bk):
+            if (blk, off) not in touched:
+                np.testing.assert_array_equal(out[blk, :, off, :],
+                                              before[blk, :, off, :])
+
+
+def test_append_kv_clamps_overrun_to_last_cell(rng):
+    """A slot appending past its table capacity (retired-but-stepping, or a
+    gamma overshoot) must clamp into the final addressed cell instead of
+    indexing out of bounds; the last token wins that cell."""
+    nb, h, bk, d, mb, t = 4, 1, 4, 2, 2, 3
+    pages = jnp.zeros((nb, h, bk, d), jnp.int8)
+    table = jnp.asarray([[1, 2]], jnp.int32)
+    base = jnp.asarray([mb * bk - 1], jnp.int32)  # one cell of room left
+    vals = jnp.asarray(rng.integers(1, 128, (1, t, h, d)), jnp.int8)
+    out = np.array(paged_kv.append_kv(pages, table, base, vals))
+    np.testing.assert_array_equal(out[2, :, bk - 1, :],
+                                  np.asarray(vals[0, -1]))
+    out[2, :, bk - 1, :] = 0
+    assert not out.any()                          # nothing else was written
+
+
+def test_rollback_slot_trashes_tail_and_preserves_others():
+    bk, mb, slots = 8, 4, 2
+    pool = paged_kv.init_kv_pages(1, 10, 1, bk, 4, slots, mb)
+    pool = dict(pool,
+                block_table=jnp.asarray([[1, 2, 3, 4], [5, 6, 7, 8]],
+                                        jnp.int32),
+                length=jnp.asarray([29, 31], jnp.int32))
+    rolled = paged_kv.rollback_slot(pool, jnp.int32(0), jnp.int32(12))
+    # 12 tokens span ceil(12/8)=2 blocks: [1, 2] kept, [3, 4] trashed
+    np.testing.assert_array_equal(np.asarray(rolled["block_table"][0]),
+                                  [1, 2, paged_kv.TRASH_BLOCK,
+                                   paged_kv.TRASH_BLOCK])
+    np.testing.assert_array_equal(np.asarray(rolled["block_table"][1]),
+                                  [5, 6, 7, 8])   # other slot untouched
+    np.testing.assert_array_equal(np.asarray(rolled["length"]), [12, 31])
+
+
+def test_rollback_slot_block_boundary():
+    """new_len landing exactly on a block boundary keeps exactly
+    new_len/block_k blocks — the ceil must not round an exact fit up."""
+    bk, mb = 8, 3
+    pool = paged_kv.init_kv_pages(1, 8, 1, bk, 4, 1, mb)
+    pool = dict(pool, block_table=jnp.asarray([[1, 2, 3]], jnp.int32),
+                length=jnp.asarray([20], jnp.int32))
+    rolled = paged_kv.rollback_slot(pool, jnp.int32(0), jnp.int32(2 * bk))
+    np.testing.assert_array_equal(np.asarray(rolled["block_table"][0]),
+                                  [1, 2, paged_kv.TRASH_BLOCK])
+    # and rolling back to zero trashes the whole row
+    empty = paged_kv.rollback_slot(pool, jnp.int32(0), jnp.int32(0))
+    assert not np.asarray(empty["block_table"][0]).any()
+
+
+def test_tail_blocks_matches_rollback_and_never_frees_trash():
+    bk = 8
+    assert paged_kv.tail_blocks([1, 2, 3, 4], 12, bk) == [3, 4]
+    assert paged_kv.tail_blocks([1, 2, 3], 2 * bk, bk) == [3]
+    assert paged_kv.tail_blocks([1, 2, 3], 0, bk) == [1, 2, 3]
+    # a row that already ends on the trash block must not "free" it
+    assert paged_kv.tail_blocks([1, 2, paged_kv.TRASH_BLOCK], 8, bk) == [2]
+
+
+def test_rollback_freed_blocks_recycle_through_allocator():
+    """End-to-end host bookkeeping: rollback's tail goes back to the
+    allocator and is handed out again, with no leak and no double free."""
+    bk = 8
+    a = paged_kv.BlockAllocator(5)                # ids 1..4
+    ids = a.alloc(4)
+    tail = paged_kv.tail_blocks(ids, 9, bk)       # keep ceil(9/8)=2
+    assert tail == ids[2:]
+    a.free(tail)
+    assert a.live_count == 2 and a.free_count == 2
+    assert a.alloc(2) == tail                     # FIFO re-entry
+    a.free(tail)
+    with pytest.raises(paged_kv.BlockAllocationError):
+        a.free(tail)                              # double free still caught
+
+
+def test_truncate_lengths_is_length_only(rng):
+    pool = paged_kv.init_kv_pages(2, 6, 1, 4, 4, 3, 2)
+    pool = dict(pool, length=jnp.asarray([7, 8, 3], jnp.int32))
+    cut = paged_kv.truncate_lengths(pool, jnp.asarray([5, 8, 0]))
+    np.testing.assert_array_equal(np.asarray(cut["length"]), [5, 8, 0])
+    assert cut["length"].dtype == jnp.int32
+    for key in ("k_pages", "v_pages", "block_table", "scale_k", "scale_v"):
+        assert cut[key] is pool[key]              # untouched, not copied

@@ -1,0 +1,207 @@
+"""Speculative decoding: verify-kernel parity and scheduler correctness.
+
+The whole feature rests on one contract: verifying ``gamma`` draft tokens
+in a single fused launch must be *bitwise* the same computation as the
+``gamma`` sequential decode steps the non-speculative scheduler would have
+run — token ``t`` attends at effective length ``cache_len - (gamma-1-t)``
+with its own per-(slot, token) quantization scale.  If that holds, greedy
+speculative output equals greedy plain output token-for-token regardless
+of what the drafter proposes; the drafter can only change *speed*.
+
+Layers of evidence, mirroring how the contract composes:
+
+  * **ops**: a property sweep (gamma x head_dim x window, cache lengths
+    deliberately not block-aligned) pins interpret == XLA == per-token
+    sequential fused decode, ``array_equal``; the paged entry pins
+    table-gather == dense on the gathered cache.
+  * **autotune**: the verify tile selector only hands the launcher valid
+    k-tiles.
+  * **scheduler**: `launch/serve.py` speculative serving — shared-cache
+    self-draft, a layer-prefix drafter (distinct cache), and an
+    adversarial random-weights drafter (accept ~ 0) — all finish with
+    exactly the plain paged scheduler's tokens and leak no blocks.
+
+Falls back to ``tests/_hypothesis_stub.py`` when hypothesis is absent.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.core import paged_kv
+from repro.core import split_softmax as ss
+from repro.core.lut import LUTConfig
+from repro.kernels import autotune, ops
+from repro.launch import steps as lsteps
+
+CFG = LUTConfig(scale_z=2.6 / 127)
+EXP_LUT, RECIP_LUT = ss.make_luts(CFG)
+S_K, S_V = jnp.float32(0.011), jnp.float32(0.02)
+
+GAMMAS = (2, 4, 8)
+HEAD_DIMS = (64, 128)
+WINDOWS = (None, 96)
+S_MAX = 256        # ref oracle needs s_max % min(128, s_max) == 0
+BLOCK_K = 32
+
+
+def _inputs(seed, gamma, d, *, b=2, hq=4, hkv=2):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(0, 0.5, (b, hq, gamma, d)), jnp.float32)
+    k = jnp.asarray(rng.integers(-128, 128, (b, hkv, S_MAX, d)), jnp.int8)
+    v = jnp.asarray(rng.integers(-128, 128, (b, hkv, S_MAX, d)), jnp.int8)
+    # one scale per (slot, token), all distinct — the shape the serving
+    # path feeds (per-slot per-step absmax calibration)
+    s_q = jnp.asarray(rng.uniform(0.008, 0.02, (b, gamma)), jnp.float32)
+    # lens >= gamma (every verify token needs a live effective length) and
+    # forced odd, so they are never multiples of any block size
+    lens = rng.integers(gamma, S_MAX, (b,)) | 1
+    lens = jnp.asarray(np.minimum(lens, S_MAX - 1), jnp.int32)
+    return q, k, v, s_q, lens
+
+
+def _sequential_oracle(q, k, v, s_q, lens, gamma, window):
+    """Token t re-decoded alone at its effective length — by construction
+    the call the non-speculative scheduler would have made at that step."""
+    outs = []
+    for i in range(gamma):
+        eff = lens - (gamma - 1 - i)
+        outs.append(ops.splitmax_decode_fused(
+            q[:, :, i, :], k, v, s_q[:, i], S_K, S_V, eff, EXP_LUT,
+            RECIP_LUT, cfg=CFG, window=window, block_k=BLOCK_K,
+            impl="interpret"))
+    return jnp.stack(outs, axis=2)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(min_value=0, max_value=len(GAMMAS) - 1),
+       st.integers(min_value=0, max_value=len(HEAD_DIMS) - 1),
+       st.integers(min_value=0, max_value=len(WINDOWS) - 1),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_verify_bitwise_matches_sequential_decode(gi, di, wi, seed):
+    gamma, d, window = GAMMAS[gi], HEAD_DIMS[di], WINDOWS[wi]
+    q, k, v, s_q, lens = _inputs(seed, gamma, d)
+    args = (q, k, v, s_q, S_K, S_V, lens, EXP_LUT, RECIP_LUT)
+    interp = ops.splitmax_decode_fused_verify(
+        *args, cfg=CFG, window=window, block_k=BLOCK_K, impl="interpret")
+    xla = ops.splitmax_decode_fused_verify(
+        *args, cfg=CFG, window=window, impl="xla")
+    seq = _sequential_oracle(q, k, v, s_q, lens, gamma, window)
+    np.testing.assert_array_equal(np.asarray(interp), np.asarray(xla))
+    np.testing.assert_array_equal(np.asarray(interp), np.asarray(seq))
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.integers(min_value=0, max_value=len(GAMMAS) - 1),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_verify_paged_matches_dense_gather(gi, seed):
+    gamma, d, b, hkv = GAMMAS[gi], 64, 2, 2
+    q, _, _, s_q, lens = _inputs(seed, gamma, d)
+    rng = np.random.default_rng(seed + 1)
+    mb = S_MAX // BLOCK_K
+    nb = 1 + b * mb
+    kp = jnp.asarray(rng.integers(-128, 128, (nb, hkv, BLOCK_K, d)),
+                     jnp.int8)
+    vp = jnp.asarray(rng.integers(-128, 128, (nb, hkv, BLOCK_K, d)),
+                     jnp.int8)
+    table = jnp.asarray(
+        rng.permutation(np.arange(1, nb)).reshape(b, mb), jnp.int32)
+    kc = paged_kv.gather_kv(kp, table)
+    vc = paged_kv.gather_kv(vp, table)
+    paged_args = (q, kp, vp, table, s_q, S_K, S_V, lens, EXP_LUT, RECIP_LUT)
+    pi = ops.splitmax_decode_fused_verify_paged(
+        *paged_args, cfg=CFG, impl="interpret")
+    px = ops.splitmax_decode_fused_verify_paged(
+        *paged_args, cfg=CFG, impl="xla")
+    di_ = ops.splitmax_decode_fused_verify(
+        q, kc, vc, s_q, S_K, S_V, lens, EXP_LUT, RECIP_LUT, cfg=CFG,
+        block_k=BLOCK_K, impl="interpret")
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(di_))
+    np.testing.assert_array_equal(np.asarray(pi), np.asarray(px))
+
+
+def test_verify_accepts_legacy_per_token_scale():
+    """(T,) s_q (one scale per token, shared across slots) must broadcast
+    to the (B, T) contract rather than being misread as per-slot."""
+    gamma, d = 4, 64
+    q, k, v, s_q, lens = _inputs(7, gamma, d)
+    shared = s_q[0]                                   # (T,)
+    legacy = ops.splitmax_decode_fused_verify(
+        q, k, v, shared, S_K, S_V, lens, EXP_LUT, RECIP_LUT, cfg=CFG,
+        block_k=BLOCK_K, impl="interpret")
+    full = ops.splitmax_decode_fused_verify(
+        q, k, v, jnp.broadcast_to(shared, (q.shape[0], gamma)), S_K, S_V,
+        lens, EXP_LUT, RECIP_LUT, cfg=CFG, block_k=BLOCK_K,
+        impl="interpret")
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(full))
+
+
+def test_verify_tile_is_always_valid():
+    for d in HEAD_DIMS:
+        for s_max in (256, 512, 1024, 2048):
+            for gamma in GAMMAS:
+                bk, g_pad = autotune.verify_tile(d, s_max, gamma)
+                assert s_max % bk == 0, (d, s_max, gamma, bk)
+                assert g_pad >= 1
+
+
+# --------------------------- scheduler parity -------------------------------
+
+def _spec_serve_case(rng):
+    cfg = get_arch("tinyllama_1p1b").smoke.replace(dtype="float32")
+    params = lsteps.init_params_fn(cfg)(jax.random.PRNGKey(3))
+    prompts = [rng.integers(0, cfg.vocab_size, 8, dtype=np.int32)
+               for _ in range(5)]
+    gens = [4, 3, 4, 2, 4]                # staggered: retirement churn
+    return cfg, params, prompts, gens
+
+
+def test_speculative_serve_bitwise_matches_paged():
+    """The acceptance contract end-to-end, under churn (requests > slots),
+    for every drafter shape: shared-cache self-draft, a 1-layer prefix
+    drafter (distinct cache), and an adversarial random-weights drafter
+    whose proposals are nearly always rejected.  Emitted tokens must equal
+    plain paged greedy serving exactly, and no blocks may leak."""
+    from repro.launch import serve as srv
+    rng_ = np.random.default_rng(11)
+    cfg, params, prompts, gens = _spec_serve_case(rng_)
+    plain = srv.serve(params, cfg, prompts, slots=2, gen=4, gens=gens,
+                      cache_kind="paged", block_k=8)
+
+    garbage = (lsteps.init_params_fn(cfg)(jax.random.PRNGKey(99)), cfg)
+    drafters = {
+        "self": "self",
+        "prefix": srv.make_self_draft(params, cfg, 1),
+        "garbage": garbage,
+    }
+    for name, draft in drafters.items():
+        for gamma in (2, 3):
+            spec = srv.serve(params, cfg, prompts, slots=2, gen=4,
+                             gens=gens, cache_kind="paged", block_k=8,
+                             draft=draft, gamma=gamma)
+            assert spec["finished"] == plain["finished"], (name, gamma)
+            assert spec["leaked_blocks"] == 0, (name, gamma)
+            if name == "garbage":
+                # rejections dominate, yet the correction token still
+                # guarantees >= 1 emitted token per verify
+                assert spec["tokens_per_verify"] >= 1.0
+
+
+def test_self_draft_prefix_slicing():
+    from repro.launch import serve as srv
+    cfg = get_arch("tinyllama_1p1b").smoke.replace(dtype="float32")
+    params = lsteps.init_params_fn(cfg)(jax.random.PRNGKey(0))
+    dparams, dcfg = srv.make_self_draft(params, cfg, 1)
+    assert dcfg.n_layers == 1
+    # prefix layer 0 is shared storage, embed/head untouched
+    full = jax.tree.leaves(params["segments"][0])
+    cut = jax.tree.leaves(dparams["segments"][0])
+    for f, c in zip(full, cut):
+        np.testing.assert_array_equal(np.asarray(f[:1]), np.asarray(c))
+    whole, wcfg = srv.make_self_draft(params, cfg, None)
+    assert whole is params and wcfg is cfg
