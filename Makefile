@@ -15,7 +15,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test collect kernels dist bench-smoke bench-json perf-check
+.PHONY: test collect kernels dist bench-smoke bench-json perf-check chaos
 
 # fail fast on import/collection errors across every test module
 collect:
@@ -48,3 +48,26 @@ bench-json:
 # (PERF_CHECK_THRESHOLD overrides 0.15 for cross-machine runs, e.g. CI)
 perf-check:
 	PYTHONPATH=src:. $(PY) benchmarks/perf_check.py
+
+# seeded fault-injection drill through the over-committed serving CLI:
+# forced pool exhaustion mid-decode, an injected scheduler stall, and a
+# NaN'd decode row, on a pool sized for ~2 sequences across 4 slots.  The
+# run must terminate cleanly — every request finished/failed/expired (none
+# lost), preemption actually exercised, zero leaked blocks — with the
+# faults and straggler reports recorded in the metrics artifact.
+CHAOS_JSON ?= /tmp/repro_chaos_health.json
+chaos:
+	REPRO_FAULT_EXHAUST=6:5 REPRO_FAULT_DELAY=14:0.3 REPRO_FAULT_NAN=20:1 \
+	REPRO_FAULT_SEED=7 \
+	$(PY) -m repro.launch.serve --smoke --requests 8 --slots 4 \
+	    --prompt-len 18 --gen 14 --block-k 8 --pool-blocks 11 \
+	    --deadline-steps 300 --metrics-json $(CHAOS_JSON)
+	$(PY) -c "import json; d = json.load(open('$(CHAOS_JSON)')); \
+	    r, c = d['run'], d['counters']; \
+	    assert r['leaked_blocks'] == 0, r; \
+	    assert r['served'] + len(r['failed']) + len(r['expired']) == 8, r; \
+	    assert c['faults_injected'] >= 2, c; \
+	    assert c['preemptions'] >= 1, c; \
+	    print('chaos: clean termination --', c['faults_injected'], \
+	          'faults,', c['preemptions'], 'preemptions,', r['served'], \
+	          'served, 0 leaked blocks')"

@@ -8,7 +8,12 @@
     speculative scheduler (prefix drafter + fused multi-token verify) no
     longer beats plain paged on the latency cell — the property the
     verify kernel exists to deliver — or if speculative output stops
-    matching plain-paged greedy output token-for-token.
+    matching plain-paged greedy output token-for-token.  The over-committed
+    **pressure** cell gates the robustness contract the same way: the run
+    must actually preempt, must finish bitwise-equal to the uncommitted
+    paged run, must leak zero blocks, and must keep its throughput cost
+    relative to the uncommitted run within threshold of the committed
+    ratio.
   * **roofline** — recompiles the decode / draft-loop / fused-verify
     launches and fails if one verify launch no longer moves fewer HBM
     bytes than the gamma decode launches it replaces (compile-only HLO
@@ -54,7 +59,7 @@ def _check_serve() -> bool:
          "draft_layers") if k in base["meta"]})
 
     failed = False
-    for kind in ("dense", "paged", "spec_paged", "speculative"):
+    for kind in ("dense", "paged", "pressure", "spec_paged", "speculative"):
         b, f = base[kind]["tok_s"], fresh[kind]["tok_s"]
         ratio = f / max(b, 1e-9)
         status = "ok"
@@ -86,6 +91,33 @@ def _check_serve() -> bool:
     else:
         print("perf-check [serve.speculative] bitwise parity with plain "
               "paged  ok")
+    # churn-under-pressure: the robustness contract, gated like a perf
+    # number because a silent fix-by-not-preempting would hide the cost
+    pr = fresh["pressure"]
+    if pr["preemptions"] < 1:
+        print("perf-check [serve.pressure] over-committed run never "
+              "preempted — pool sizing no longer exercises recovery  "
+              "REGRESSION")
+        failed = True
+    if pr["leaked_blocks"] != 0:
+        print(f"perf-check [serve.pressure] leaked_blocks = "
+              f"{pr['leaked_blocks']}  REGRESSION")
+        failed = True
+    if not fresh["pressure_parity"]:
+        print("perf-check [serve.pressure] preempted run's tokens != "
+              "uncommitted paged run  REGRESSION")
+        failed = True
+    else:
+        print(f"perf-check [serve.pressure] {pr['preemptions']} preemptions"
+              f", {pr['resumes']} resumes, bitwise parity, 0 leaks  ok")
+    b_cost = base["pressure_over_paged_tok_s"]
+    f_cost = fresh["pressure_over_paged_tok_s"]
+    status = "ok"
+    if f_cost < b_cost * (1.0 - THRESHOLD):
+        # machine-relative ratio: preemption/resume overhead grew
+        status, failed = "REGRESSION", True
+    print(f"perf-check [serve.pressure] pressure/paged tok/s: baseline "
+          f"{b_cost:.2f}x -> fresh {f_cost:.2f}x  {status}")
     return failed
 
 

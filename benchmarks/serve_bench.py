@@ -1,11 +1,19 @@
-"""Serving throughput: churn cell (dense vs paged) + latency cell (speculative).
+"""Serving throughput: churn (dense vs paged), pressure, latency (speculative).
 
-Two committed cells, each measuring the regime its scheduler exists for:
+Three committed cells, each measuring the regime its scheduler exists for:
 
 * **churn** — requests > slots with staggered generation lengths, so slots
   retire at different steps and the scheduler is constantly admitting.  The
   dense baseline collapses here (every admission re-prefills the whole
   batch); the paged scheduler does a single-sequence prefill instead.
+
+* **pressure** — the same churn workload with the block pool over-committed
+  (``PRESSURE_POOL_SEQS`` sequences' worth of blocks for ``slots`` slots),
+  so the run *must* preempt and resume requests to finish.  The cell tracks
+  the throughput cost of churn-under-pressure (``pressure_over_paged_tok_s``)
+  and re-asserts the recovery contract on every bench run: final tokens
+  bitwise equal to the uncommitted paged run (``pressure_parity``), zero
+  leaked blocks, preemptions actually observed.
 
 * **latency** — small slot count, deeper target: the regime speculative
   decoding is for.  The target is an ``TARGET_LAYERS``-layer config whose
@@ -41,7 +49,9 @@ KEEP = ("tok_s", "p50_step_ms", "p99_step_ms", "decode_steps",
         "total_tokens", "served", "wall_s", "leaked_blocks")
 SPEC_KEEP = KEEP + ("accept_rate", "tokens_per_verify", "verify_steps",
                     "draft_steps", "gamma")
+PRESSURE_KEEP = KEEP + ("preemptions", "resumes")
 REPEATS = 3               # best-of-N; absorbs shared-host timing noise
+PRESSURE_POOL_SEQS = 5    # pool sized for 5 sequences across 8 slots
 GAMMA = 8                 # draft tokens per speculative round
 TARGET_LAYERS = 8         # latency-cell target depth
 DRAFT_LAYERS = 1          # prefix drafter depth (target cost fraction 1/8)
@@ -92,7 +102,7 @@ def _spec_setup(requests: int, prompt_len: int, gen: int, seed: int,
     return cfg, params, drafter, prompts, gens
 
 
-def run_grid(requests: int = 24, slots: int = 8, prompt_len: int = 256,
+def run_grid(requests: int = 24, slots: int = 8, prompt_len: int = 250,
              gen: int = 32, block_k: int = 32, seed: int = 0,
              gamma: int = GAMMA, spec_requests: int = 8,
              spec_slots: int = 1, target_layers: int = TARGET_LAYERS,
@@ -108,13 +118,37 @@ def run_grid(requests: int = 24, slots: int = 8, prompt_len: int = 256,
     }}
 
     cfg, params, prompts, gens = _churn_setup(requests, prompt_len, gen, seed)
+    paged_finished = None
     for kind in ("dense", "paged"):
         stats = srv.serve(params, cfg, prompts, slots=slots, gen=gen,
                           gens=gens, cache_kind=kind, block_k=block_k,
                           warmup=True, repeats=REPEATS)
         out[kind] = {k: stats[k] for k in KEEP if k in stats}
+        if kind == "paged":
+            paged_finished = stats["finished"]
     out["paged_over_dense_tok_s"] = (
         out["paged"]["tok_s"] / max(out["dense"]["tok_s"], 1e-9))
+
+    # churn under pressure: same workload, pool over-committed to
+    # PRESSURE_POOL_SEQS sequences — completion now requires preemption
+    # and bitwise resume.  The default prompt_len (250) is deliberately
+    # off block_k alignment: admission covers blocks(prompt+1), so a
+    # block-aligned prompt with gen <= block_k would never grow mid-decode
+    # and over-commit would degenerate to admission stalls — no preemption
+    # for the gate to check
+    from repro.core import paged_kv
+    max_len = prompt_len + gen + 8          # serve_paged's default sizing
+    pool = 1 + PRESSURE_POOL_SEQS * paged_kv.blocks_per_seq(max_len, block_k)
+    out["meta"]["pressure_pool_blocks"] = pool
+    pstats = srv.serve(params, cfg, prompts, slots=slots, gen=gen,
+                       gens=gens, cache_kind="paged", block_k=block_k,
+                       pool_blocks=pool, warmup=True, repeats=REPEATS)
+    out["pressure"] = {k: pstats[k] for k in PRESSURE_KEEP if k in pstats}
+    out["pressure_over_paged_tok_s"] = (
+        pstats["tok_s"] / max(out["paged"]["tok_s"], 1e-9))
+    # the recovery contract, re-checked on every bench run: preemption must
+    # have happened, and must not have changed a single token
+    out["pressure_parity"] = pstats["finished"] == paged_finished
 
     scfg, sparams, drafter, sprompts, sgens = _spec_setup(
         spec_requests, prompt_len, gen, seed, target_layers, draft_layers)
@@ -187,7 +221,7 @@ def main(argv=None) -> None:
     ap.add_argument("--slots", type=int, nargs="+", default=None)
     ap.add_argument("--block-k", type=int, nargs="+", default=None)
     ap.add_argument("--requests", type=int, default=None)
-    ap.add_argument("--prompt-len", type=int, default=256)
+    ap.add_argument("--prompt-len", type=int, default=250)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--gamma", type=int, default=GAMMA)
     ap.add_argument("--seed", type=int, default=0)

@@ -40,7 +40,24 @@ TRASH_BLOCK = 0
 
 
 class BlockAllocationError(RuntimeError):
-    """Pool exhausted, double free, or free of an unallocated block."""
+    """Pool exhausted, double free, or free of an unallocated block.
+
+    Exhaustion failures carry the allocator's state (``requested``,
+    ``free``, ``live``, ``high_water``, ``num_blocks``) so an over-commit
+    scheduler can log/act on them, and the message is self-explaining when
+    one escapes to a traceback.
+    """
+
+    def __init__(self, msg: str, *, requested: Optional[int] = None,
+                 free: Optional[int] = None, live: Optional[int] = None,
+                 high_water: Optional[int] = None,
+                 num_blocks: Optional[int] = None):
+        super().__init__(msg)
+        self.requested = requested
+        self.free = free
+        self.live = live
+        self.high_water = high_water
+        self.num_blocks = num_blocks
 
 
 class BlockAllocator:
@@ -49,7 +66,9 @@ class BlockAllocator:
     Reserved ids (by default the trash block) are never handed out.  Frees
     recycle ids FIFO so the pool wears evenly; invariants (no double free,
     no foreign ids, exhaustion) raise :class:`BlockAllocationError` loudly
-    rather than corrupting another request's cache.
+    rather than corrupting another request's cache.  ``high_water`` tracks
+    the peak live count — the pool occupancy a fully-provisioned deployment
+    would have needed.
     """
 
     def __init__(self, num_blocks: int,
@@ -62,6 +81,7 @@ class BlockAllocator:
         self._free = deque(i for i in range(num_blocks)
                            if i not in self._reserved)
         self._live: set = set()
+        self.high_water = 0
 
     @property
     def free_count(self) -> int:
@@ -78,9 +98,13 @@ class BlockAllocator:
         if n > len(self._free):
             raise BlockAllocationError(
                 f"requested {n} blocks, only {len(self._free)} free "
-                f"({len(self._live)} live of {self.num_blocks})")
+                f"({len(self._live)} live of {self.num_blocks}, "
+                f"high water {self.high_water})",
+                requested=n, free=len(self._free), live=len(self._live),
+                high_water=self.high_water, num_blocks=self.num_blocks)
         ids = [self._free.popleft() for _ in range(n)]
         self._live.update(ids)
+        self.high_water = max(self.high_water, len(self._live))
         return ids
 
     def free(self, ids: Iterable[int]) -> None:
@@ -88,11 +112,16 @@ class BlockAllocator:
         ids = list(ids)
         for i in ids:
             if i in self._reserved:
-                raise BlockAllocationError(f"freeing reserved block {i}")
+                raise BlockAllocationError(
+                    f"freeing reserved block {i}",
+                    free=len(self._free), live=len(self._live),
+                    high_water=self.high_water, num_blocks=self.num_blocks)
             if i not in self._live:
                 raise BlockAllocationError(
                     f"freeing block {i} that is not allocated "
-                    f"(double free or foreign id)")
+                    f"(double free or foreign id)",
+                    free=len(self._free), live=len(self._live),
+                    high_water=self.high_water, num_blocks=self.num_blocks)
         for i in ids:
             self._live.discard(i)
             self._free.append(i)

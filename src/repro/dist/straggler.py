@@ -1,4 +1,4 @@
-"""Windowed-median straggler watchdog for the training loop.
+"""Windowed-median straggler watchdog for the training and serving loops.
 
 At multi-pod scale a single slow host (thermal throttling, a dying SSD, a
 noisy neighbour) stretches every synchronous step: the collective waits for
@@ -8,9 +8,19 @@ window *median* — the median (not mean) so that the flagged outliers
 themselves cannot drag the baseline upward fast enough to mask a persistent
 regression.
 
+The serving scheduler (``launch/serve.py``) runs the same watchdog over its
+decode iterations, where steps are bimodal by design: an iteration that
+admitted or preempted a request paid for a prefill and is *expected* to be
+slow.  ``observe(..., expect_slow=True)`` exempts such steps — they are
+neither flagged (no false positives) nor admitted to the window (the
+decode-step baseline stays pure, so an injected or real scheduler delay
+stands out against steady-state decode, not against a prefill-inflated
+median).
+
 Reports are structured (:class:`StragglerReport`) so the launcher can log
-them, export them to a metrics pipe, or trigger host replacement; the
-watchdog itself never raises — detection is advisory.
+them, export them to a metrics pipe (``serve.py --metrics-json`` embeds
+``to_dict()`` per flagged step), or trigger host replacement; the watchdog
+itself never raises — detection is advisory.
 """
 from __future__ import annotations
 
@@ -76,8 +86,13 @@ class StragglerWatchdog:
 
     # ---- core ----------------------------------------------------------
 
-    def observe(self, step: int, seconds: float
-                ) -> Optional[StragglerReport]:
+    def observe(self, step: int, seconds: float, *,
+                expect_slow: bool = False) -> Optional[StragglerReport]:
+        if expect_slow:
+            # known-slow step (admission prefill, preemption recovery):
+            # not an anomaly, and keeping it out of the window preserves
+            # the steady-state baseline the next steps are judged against
+            return None
         report = None
         if len(self._durations) >= self.min_history:
             med = statistics.median(self._durations)

@@ -1,0 +1,149 @@
+"""Seeded fault-injection harness for the serving scheduler.
+
+Chaos testing for the over-committed serving path: each hook forces one of
+the failure modes the scheduler claims to survive, deterministically (every
+knob names an exact step), so a chaos run is reproducible and its
+recovery can be asserted bitwise.  Three faults:
+
+* **allocator exhaustion** — at step N the injector *steals* every free
+  block from the pool and holds them for ``hold`` steps, so the next slot
+  growth/admission hits :class:`~repro.core.paged_kv.BlockAllocationError`
+  and the scheduler must preempt/stall until the blocks come back;
+* **scheduler delay** — step N is stretched by ``seconds`` of host sleep,
+  which the serving loop's ``StragglerWatchdog`` must flag;
+* **NaN/Inf activation corruption** — at step N the decode logits of one
+  slot are overwritten with NaN before token selection; the scheduler's
+  finite-guard must detect it and retire the slot (fail the request)
+  instead of emitting garbage tokens or hanging.
+
+Faults are configured programmatically (:class:`FaultPlan`) or from the
+environment (``FaultPlan.from_env``), so `make chaos` can drive the CLI:
+
+    REPRO_FAULT_EXHAUST=<step>[:<hold>]     steal all free blocks at <step>,
+                                            return them <hold> steps later
+                                            (default hold 4)
+    REPRO_FAULT_DELAY=<step>:<seconds>      sleep <seconds> before <step>
+    REPRO_FAULT_NAN=<step>[:<slot>]         NaN the logits of <slot>
+                                            (default 0) at <step>
+    REPRO_FAULT_SEED=<int>                  seed for any randomized choice
+                                            (reserved; recorded in events)
+
+Every triggered fault is recorded through the run's
+:class:`~repro.launch.health.ServeHealth` so the metrics JSON is the
+ground truth of what the chaos run actually did.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import List, Optional
+
+import jax.numpy as jnp
+
+from repro.core import paged_kv
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Static description of the faults to inject into one run."""
+
+    exhaust_step: Optional[int] = None
+    exhaust_hold: int = 4
+    delay_step: Optional[int] = None
+    delay_seconds: float = 0.0
+    nan_step: Optional[int] = None
+    nan_slot: int = 0
+    seed: int = 0
+
+    @classmethod
+    def from_env(cls, env=os.environ) -> "FaultPlan":
+        """Parse the ``REPRO_FAULT_*`` knobs; unset knobs stay inert."""
+        exhaust_step, exhaust_hold = None, 4
+        if env.get("REPRO_FAULT_EXHAUST"):
+            parts = env["REPRO_FAULT_EXHAUST"].split(":")
+            exhaust_step = int(parts[0])
+            if len(parts) > 1:
+                exhaust_hold = int(parts[1])
+        delay_step, delay_seconds = None, 0.0
+        if env.get("REPRO_FAULT_DELAY"):
+            step_s, sec_s = env["REPRO_FAULT_DELAY"].split(":")
+            delay_step, delay_seconds = int(step_s), float(sec_s)
+        nan_step, nan_slot = None, 0
+        if env.get("REPRO_FAULT_NAN"):
+            parts = env["REPRO_FAULT_NAN"].split(":")
+            nan_step = int(parts[0])
+            if len(parts) > 1:
+                nan_slot = int(parts[1])
+        return cls(exhaust_step=exhaust_step, exhaust_hold=exhaust_hold,
+                   delay_step=delay_step, delay_seconds=delay_seconds,
+                   nan_step=nan_step, nan_slot=nan_slot,
+                   seed=int(env.get("REPRO_FAULT_SEED", "0")))
+
+    @property
+    def armed(self) -> bool:
+        return (self.exhaust_step is not None or self.delay_step is not None
+                or self.nan_step is not None)
+
+
+class FaultInjector:
+    """Stateful executor of a :class:`FaultPlan` inside a serving loop.
+
+    The scheduler calls the three hooks at fixed points of every iteration;
+    with an empty plan each hook is a no-op comparison, so the injector can
+    stay permanently wired into the production loop.
+    """
+
+    def __init__(self, plan: Optional[FaultPlan] = None, health=None):
+        self.plan = plan or FaultPlan()
+        self.health = health
+        self._stolen: List[int] = []
+        self._steal_step: Optional[int] = None
+
+    def _record(self, kind: str, step: int, **detail) -> None:
+        if self.health is not None:
+            self.health.fault({"kind": kind, "step": step, **detail})
+
+    # ---- hooks ---------------------------------------------------------
+
+    def on_step(self, step: int) -> None:
+        """Called at the top of each scheduler iteration (delay fault)."""
+        p = self.plan
+        if p.delay_step is not None and step == p.delay_step:
+            time.sleep(p.delay_seconds)
+            self._record("delay", step, seconds=p.delay_seconds)
+
+    def squeeze_pool(self, step: int,
+                     alloc: "paged_kv.BlockAllocator") -> None:
+        """Steal every free block at the armed step; give them back after
+        ``exhaust_hold`` steps.  Between the two, any growth/admission sees
+        a genuinely exhausted pool and must take its pressure path."""
+        p = self.plan
+        if self._stolen and self._steal_step is not None \
+                and step >= self._steal_step + p.exhaust_hold:
+            alloc.free(self._stolen)
+            self._record("exhaust_release", step,
+                         returned=len(self._stolen))
+            self._stolen, self._steal_step = [], None
+        if p.exhaust_step is not None and step == p.exhaust_step \
+                and not self._stolen:
+            self._stolen = alloc.alloc(alloc.free_count)
+            self._steal_step = step
+            self._record("exhaust", step, stolen=len(self._stolen),
+                         hold=p.exhaust_hold)
+
+    def corrupt_logits(self, step: int, logits):
+        """NaN one slot's logits row at the armed step (decode-activation
+        corruption as seen by the token selector and the finite-guard)."""
+        p = self.plan
+        if p.nan_step is not None and step == p.nan_step:
+            logits = logits.at[p.nan_slot].set(jnp.nan)
+            self._record("nan", step, slot=p.nan_slot)
+        return logits
+
+    def drain(self, alloc: "paged_kv.BlockAllocator") -> None:
+        """Return any still-held stolen blocks (end of run): chaos must
+        never be the source of a block leak."""
+        if self._stolen:
+            alloc.free(self._stolen)
+            self._stolen, self._steal_step = [], None

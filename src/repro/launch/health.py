@@ -1,0 +1,89 @@
+"""Serving health/metrics collector: the run's operational record.
+
+Over-committed serving is only operable if every degradation path leaves a
+trace: a preemption, an expired deadline, a NaN-retired slot, a straggling
+step, or a forced fault all land here as counters/events, and the whole
+record is emitted as one JSON artifact per run (``serve.py
+--metrics-json``).  The collector is deliberately host-side and append-only
+— it never touches the jitted path, so turning metrics on cannot change
+served tokens.
+
+The schema is flat on purpose (counters + small lists), so scale-out
+tooling can diff two runs or alert on a counter without schema knowledge:
+
+    counters   preemptions / resumes / resumed_tokens_replayed /
+               deadline_cancelled / nan_retired / faults_injected /
+               admissions / admission_stalls
+    pool       num_blocks / high_water / peak_live_fraction (per pool)
+    stragglers list of StragglerReport.to_dict()
+    faults     list of injected-fault event dicts (from launch.faults)
+    events     free-form (kind, step, detail) trail of degradation actions
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Dict, List, Optional
+
+
+class ServeHealth:
+    """Append-only health record for one serving run."""
+
+    def __init__(self) -> None:
+        self.counters: Dict[str, int] = {
+            "preemptions": 0,
+            "resumes": 0,
+            "resumed_tokens_replayed": 0,
+            "deadline_cancelled": 0,
+            "nan_retired": 0,
+            "faults_injected": 0,
+            "admissions": 0,
+            "admission_stalls": 0,
+        }
+        self.pools: Dict[str, Dict[str, Any]] = {}
+        self.stragglers: List[dict] = []
+        self.faults: List[dict] = []
+        self.events: List[dict] = []
+
+    # ---- recording -----------------------------------------------------
+
+    def count(self, name: str, n: int = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + n
+
+    def event(self, kind: str, step: int, **detail: Any) -> None:
+        self.events.append({"kind": kind, "step": step, **detail})
+
+    def straggler(self, report) -> None:
+        """Accepts a ``repro.dist.straggler.StragglerReport``."""
+        self.stragglers.append(report.to_dict())
+
+    def fault(self, record: dict) -> None:
+        self.faults.append(record)
+        self.count("faults_injected")
+
+    def pool(self, tag: str, allocator) -> None:
+        """Snapshot one :class:`~repro.core.paged_kv.BlockAllocator`."""
+        usable = max(allocator.num_blocks - 1, 1)   # minus the trash block
+        self.pools[tag] = {
+            "num_blocks": allocator.num_blocks,
+            "high_water": allocator.high_water,
+            "live_at_end": allocator.live_count,
+            "peak_live_fraction": allocator.high_water / usable,
+        }
+
+    # ---- emission ------------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "counters": dict(self.counters),
+            "pools": {k: dict(v) for k, v in self.pools.items()},
+            "stragglers": list(self.stragglers),
+            "faults": list(self.faults),
+            "events": list(self.events),
+        }
+
+    def write_json(self, path) -> pathlib.Path:
+        p = pathlib.Path(path)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(self.to_dict(), indent=2, sort_keys=True))
+        return p

@@ -6,30 +6,68 @@ array, each slot owns a block-table row, and batched decode steps stream one
 token per sequence per step through the split-softmax datapath — gathering
 K/V tiles *through the table* in the Pallas decode kernel.
 
-The scheduler does real continuous batching:
+The scheduler does real continuous batching with **demand-paged allocation**:
 
-  * the first wave is one batched prefill that calibrates the pool's static
-    per-layer scales and writes each slot's own blocks;
+  * every admission is a per-slot prefill (`steps.make_paged_prefill_step`)
+    that allocates only the blocks the prompt needs and writes only the new
+    slot's pages — the rest of the batch keeps decoding undisturbed; the
+    very first admission also calibrates the pool's static per-layer scales;
+  * a slot *grows* one block at a time as its sequence crosses block
+    boundaries, so pool occupancy tracks live tokens, not reservations;
   * a finished sequence retires by returning its blocks to the free-list
-    allocator and pointing its table row at the trash block;
-  * a queued request is admitted into the freed slot with a **per-slot
-    prefill** (`steps.make_paged_prefill_step`) that writes only the new
-    slot's blocks — the rest of the batch keeps decoding undisturbed; no
-    batch-wide re-prefill ever happens after the first wave.
+    allocator and pointing its table row at the trash block.
+
+Because blocks are allocated on demand, the pool can be sized **below**
+``slots * blocks_per_seq`` (``--pool-blocks``) to over-commit memory.  When
+a growth or admission then exhausts the pool, the scheduler **preempts** a
+victim (``--preempt-policy newest`` | ``longest``): the victim's blocks are
+freed, its table row is trashed, and the request is re-queued with its
+generated prefix.  On re-admission the prompt is re-prefilled (same per-slot
+executable as the original admission) and the recorded prefix is replayed
+through the ordinary decode path, so for greedy decoding the final outputs
+are **bitwise identical** to a run that was never preempted — per-row
+decode numerics do not depend on slot index or co-resident sequences, which
+``tests/test_overcommit.py`` pins.  (With ``--temperature > 0`` the replay
+still feeds the recorded prefix, but the shared sampling-key stream shifts,
+so cross-run parity is a greedy-only contract.)
+
+Operational hardening on the same loop:
+
+  * ``--deadline-steps N`` cancels any request still unfinished N scheduler
+    steps after its first admission (preemption/queue time counts — that is
+    what a deadline is for) and reports it under ``stats["expired"]``;
+  * a finite-guard folded into the token selector retires a slot whose
+    logits go NaN/Inf (``stats["failed"]``) instead of emitting garbage;
+  * every step is timed through a `repro.dist.straggler.StragglerWatchdog`
+    and every degradation (preemption, resume, stall, deadline, NaN retire,
+    injected fault) lands in a `repro.launch.health.ServeHealth` record,
+    emitted as one JSON artifact via ``--metrics-json``.
+
+Chaos knobs (see `repro.launch.faults`; all deterministic, step-addressed):
+
+    --pool-blocks N             over-commit the pool (min 1 + blocks/seq)
+    --deadline-steps N          per-request scheduler-step deadline
+    REPRO_FAULT_EXHAUST=S[:H]   steal all free blocks at step S, hold H steps
+    REPRO_FAULT_DELAY=S:SEC     sleep SEC before step S (trips the watchdog)
+    REPRO_FAULT_NAN=S[:SLOT]    NaN one slot's logits at step S
+    REPRO_FAULT_SEED=N          recorded into the fault events
 
 ``--cache dense`` keeps the pre-paged scheduler (admission = re-prefill the
 whole batch) as the measured baseline; ``benchmarks/run.py --json`` records
-both so the paged speedup under churn is a tracked artifact
-(``BENCH_serve.json``).
+both plus an over-committed churn cell so the paged speedup and the cost of
+preemption under pressure are tracked artifacts (``BENCH_serve.json``).
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama_1p1b \
-        --smoke --requests 8 --slots 4 --prompt-len 32 --gen 24
+        --smoke --requests 8 --slots 4 --prompt-len 32 --gen 24 \
+        --pool-blocks 12 --deadline-steps 200 --metrics-json health.json
 """
 from __future__ import annotations
 
 import argparse
 import functools
+import json
 import time
+from collections import deque
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -38,7 +76,10 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core import paged_kv
+from repro.dist import straggler as strag
+from repro.launch import faults as faults_mod
 from repro.launch import steps as st
+from repro.launch.health import ServeHealth
 from repro.models import transformer as T
 
 
@@ -47,23 +88,30 @@ def _percentile(xs: List[float], p: float) -> float:
 
 
 def make_sampler(temperature: float, top_p: float, vocab_size: int):
-    """Jitted token selector: logits (B, V_padded) + key -> tokens (B,).
+    """Jitted token selector: logits (B, V_padded) + key -> (tokens (B,),
+    finite (B,)).
 
     ``temperature == 0`` is greedy argmax — the default, the only mode the
     speculative path supports (its acceptance rule compares against the
     target argmax), and bit-identical to the pre-sampling scheduler.
     Otherwise: temperature-scaled nucleus sampling; padding lanes are masked
     before the softmax so they can never be drawn.
+
+    The second output is the NaN/Inf guard, computed on the *raw* logits in
+    the same launch: a row that is not entirely finite produced a garbage
+    token, and the scheduler retires that slot instead of serving it.
     """
     if temperature == 0.0:
         @jax.jit
         def greedy(logits, key):
             del key
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            ok = jnp.isfinite(logits).all(axis=-1)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), ok
         return greedy
 
     @jax.jit
     def sample(logits, key):
+        ok = jnp.isfinite(logits).all(axis=-1)
         lg = logits.astype(jnp.float32) / temperature
         lane = jnp.arange(lg.shape[-1])
         lg = jnp.where(lane >= vocab_size, -jnp.inf, lg)
@@ -75,9 +123,80 @@ def make_sampler(temperature: float, top_p: float, vocab_size: int):
             cutoff = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1,
                              keepdims=True)
             lg = jnp.where(lg < cutoff, -jnp.inf, lg)
-        return jax.random.categorical(key, lg).astype(jnp.int32)
+        return jax.random.categorical(key, lg).astype(jnp.int32), ok
 
     return sample
+
+
+class _PoolManager:
+    """Host half of demand paging for one paged cache.
+
+    Owns the slot -> block-id lists over a :class:`paged_kv.BlockAllocator`;
+    the device half (table rows) is written by the scheduler's jitted
+    ``grow`` / ``rollback`` / ``release`` steps.  All methods are plain
+    host bookkeeping — allocation failures surface as
+    :class:`paged_kv.BlockAllocationError` for the pressure path to catch.
+    """
+
+    def __init__(self, alloc: paged_kv.BlockAllocator, table_width: int,
+                 block_k: int):
+        self.alloc = alloc
+        self.mb = table_width
+        self.bk = block_k
+        self.owned: Dict[int, List[int]] = {}
+
+    def admit_row(self, slot: int, cover_len: int) -> np.ndarray:
+        """Allocate coverage for ``cover_len`` positions; full-width table
+        row (trash-padded) for the per-slot prefill."""
+        ids = self.alloc.alloc(paged_kv.blocks_per_seq(cover_len, self.bk))
+        self.owned[slot] = ids
+        row = np.full((self.mb,), paged_kv.TRASH_BLOCK, np.int32)
+        row[:len(ids)] = ids
+        return row
+
+    def short(self, slot: int, cover_len: int) -> int:
+        """Blocks missing before the slot covers ``cover_len`` positions."""
+        return (paged_kv.blocks_per_seq(cover_len, self.bk)
+                - len(self.owned[slot]))
+
+    def grow(self, slot: int, n: int):
+        """Extend a slot by ``n`` blocks; (first_table_index, new_ids)."""
+        ids = self.alloc.alloc(n)
+        start = len(self.owned[slot])
+        self.owned[slot].extend(ids)
+        return start, ids
+
+    def release(self, slot: int) -> None:
+        self.alloc.free(self.owned.pop(slot))
+
+    def reclaim_tail(self, slot: int, keep_len: int) -> int:
+        """Free blocks wholly past ``keep_len`` (speculative over-coverage);
+        returns how many went back to the free list."""
+        tail = paged_kv.tail_blocks(self.owned[slot], keep_len, self.bk)
+        if tail:
+            keep = paged_kv.blocks_per_seq(keep_len, self.bk)
+            self.owned[slot] = self.owned[slot][:keep]
+            self.alloc.free(tail)
+        return len(tail)
+
+
+def _pick_victim(active: Dict[int, int], exclude: int, policy: str,
+                 admit_seq: Dict[int, int], remaining) -> Optional[int]:
+    """Choose a slot to preempt under pool pressure.
+
+    ``newest`` evicts the most recently admitted slot (FIFO fairness: the
+    oldest requests finish first); ``longest`` evicts the slot with the most
+    generation left (frees its blocks for the longest time).  ``exclude``
+    is the grower itself — self-preemption is the caller's last resort when
+    no other slot exists.
+    """
+    cands = [s for s in active if s != exclude]
+    if not cands:
+        return None
+    if policy == "newest":
+        return max(cands, key=lambda s: admit_seq[s])
+    assert policy == "longest", policy
+    return max(cands, key=lambda s: (remaining(s), admit_seq[s]))
 
 
 def _finalize_stats(stats: Dict, finished: Dict, t0: float) -> Dict:
@@ -100,35 +219,55 @@ def serve_paged(params, cfg, prompts: List[np.ndarray], *, slots: int,
                 gens: Optional[Sequence[int]] = None,
                 temperature: float = 0.0, top_p: float = 1.0,
                 sample_seed: int = 0,
+                pool_blocks: Optional[int] = None,
+                preempt_policy: str = "newest",
+                deadline_steps: Optional[int] = None,
+                fault_plan: Optional["faults_mod.FaultPlan"] = None,
                 warmup: bool = False, repeats: int = 1,
                 verbose: bool = False) -> Dict:
-    """Paged scheduler; returns a stats dict (tok/s, latency, prefill counts,
-    the generated sequences, and allocator accounting).
+    """Demand-paged scheduler; returns a stats dict (tok/s, latency, prefill
+    counts, the generated sequences, allocator accounting, and the run's
+    ``health`` record).
 
     ``gens`` optionally staggers per-request generation lengths (churn: slots
     retire at different steps).  ``temperature``/``top_p`` select tokens via
-    :func:`make_sampler` (0.0 = greedy, the default).  ``warmup=True``
-    compiles each jitted step on throwaway inputs before the clock starts,
-    so the stats measure serving, not XLA compilation.  ``repeats > 1``
-    (benchmarking) reruns the whole schedule with the same compiled steps
-    and keeps the fastest run.
+    :func:`make_sampler` (0.0 = greedy, the default).  ``pool_blocks`` sizes
+    the block pool below the full ``1 + slots * blocks_per_seq`` reservation
+    to over-commit; exhaustion preempts a ``preempt_policy`` victim and
+    resumes it later with a bitwise-identical continuation (greedy).
+    ``warmup=True`` compiles each jitted step on throwaway inputs before the
+    clock starts; ``repeats > 1`` (benchmarking) reruns the whole schedule
+    on the same compiled steps and keeps the fastest run.
     """
     requests = len(prompts)
-    prompt_len = len(prompts[0])
     slots = min(slots, requests)
     gens = list(gens) if gens is not None else [gen] * requests
     assert len(gens) == requests
     if max_len is None:
-        max_len = prompt_len + max(gens) + 8
+        max_len = max(len(p) for p in prompts) + max(gens) + 8
     bps = paged_kv.blocks_per_seq(max_len, block_k)
+    has_kv = cfg.family in ("dense", "moe")
+    if pool_blocks is not None:
+        if not has_kv:
+            raise ValueError("--pool-blocks needs the paged KV cache "
+                             f"(family {cfg.family} has none)")
+        if pool_blocks < 1 + bps:
+            raise ValueError(
+                f"pool_blocks={pool_blocks} cannot hold one sequence: need "
+                f">= 1 + {bps} (trash + blocks_per_seq(max_len={max_len}))")
+    pool_size = pool_blocks if pool_blocks is not None else 1 + slots * bps
     sampler = make_sampler(temperature, top_p, cfg.vocab_size)
+    assert preempt_policy in ("newest", "longest"), preempt_policy
 
     # every step that rewrites the cache donates it — the pool is the big
     # buffer and must never be copied; slot indices are traced arrays so one
     # executable serves every slot (a Python-int index would bake the slot
-    # into the jaxpr and recompile per value)
-    wave_prefill = jax.jit(st.make_paged_prefill_step(cfg, calibrate=True),
-                           donate_argnums=(2,))
+    # into the jaxpr and recompile per value).  The calibrating and plain
+    # per-slot prefills are distinct executables; each request is resumed
+    # through the same one that first admitted it, which (same executable,
+    # same inputs) is what makes re-prefill bitwise reproducible.
+    calib_prefill = jax.jit(st.make_paged_prefill_step(cfg, calibrate=True),
+                            donate_argnums=(2,))
     slot_prefill = jax.jit(st.make_paged_prefill_step(cfg, calibrate=False),
                            donate_argnums=(2,))
     decode_step = jax.jit(st.make_decode_step(cfg), donate_argnums=(2,))
@@ -141,34 +280,52 @@ def serve_paged(params, cfg, prompts: List[np.ndarray], *, slots: int,
         return cache
 
     @functools.partial(jax.jit, donate_argnums=(0,))
+    def grow_step(cache, slot, idx, block):
+        kv = cache["kv"]
+        return dict(cache, kv=dict(
+            kv, block_table=kv["block_table"].at[slot, idx].set(block)))
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
     def splice_token(tokens, slot, token):
         return tokens.at[slot].set(token)
 
     if warmup:
-        # compile every trace against a scratch cache (donated step-to-step)
-        w_tok = jnp.asarray(np.stack([prompts[0]] * slots))
-        w_blocks = jnp.arange(1, 1 + slots * bps,
-                              dtype=jnp.int32).reshape(slots, bps)
-        w_last, w_cache = wave_prefill(
-            params, w_tok, T.make_paged_cache(cfg, slots, max_len,
-                                              block_k=block_k),
-            jnp.arange(slots, dtype=jnp.int32), w_blocks)
-        w_l1, w_cache = slot_prefill(params, jnp.asarray(prompts[0])[None],
-                                     w_cache, jnp.asarray([0], jnp.int32),
-                                     w_blocks[:1])
-        int(jnp.argmax(w_l1[0]))        # the admission-path argmax variant
-        w_out, w_cache = decode_step(params, jnp.argmax(w_last, -1).astype(
-            jnp.int32), w_cache)
+        # compile every trace against a scratch cache (donated step-to-step);
+        # the scratch pool uses the same num_blocks so the executables match
+        w_cache = T.make_paged_cache(cfg, slots, max_len, block_k=block_k,
+                                     num_blocks=pool_size)
+        w_row = np.full((bps,), paged_kv.TRASH_BLOCK, np.int32)
+        w_row[:1] = 1
+        w_last, w_cache = calib_prefill(
+            params, jnp.asarray(prompts[0])[None], w_cache,
+            jnp.asarray([0], jnp.int32), jnp.asarray(w_row[None], jnp.int32))
+        w_l1, w_cache = slot_prefill(
+            params, jnp.asarray(prompts[0])[None], w_cache,
+            jnp.asarray([0], jnp.int32), jnp.asarray(w_row[None], jnp.int32))
+        sampler(w_l1, jax.random.PRNGKey(0))
+        if has_kv:
+            w_cache = grow_step(w_cache, jnp.int32(0), jnp.int32(1),
+                                jnp.int32(2))
+        w_tok = jnp.zeros((slots,), jnp.int32)
+        w_out, w_cache = decode_step(params, w_tok, w_cache)
+        sampler(w_out, jax.random.PRNGKey(0))
         w_cache = release_step(w_cache, jnp.int32(0))
-        w_tok2 = splice_token(jnp.zeros((slots,), jnp.int32), jnp.int32(0),
-                              jnp.int32(0))
+        w_tok2 = splice_token(w_tok, jnp.int32(0), jnp.int32(0))
         jax.block_until_ready((w_out, w_tok2))
 
     def _run() -> Dict:
         # fresh scheduler state per run; the jitted steps above are shared,
         # so repeats measure serving on warm executables
-        cache = T.make_paged_cache(cfg, slots, max_len, block_k=block_k)
-        alloc = paged_kv.BlockAllocator(1 + slots * bps)
+        cache = T.make_paged_cache(cfg, slots, max_len, block_k=block_k,
+                                   num_blocks=pool_size)
+        paged = "kv" in cache
+        alloc = paged_kv.BlockAllocator(pool_size) if paged else None
+        pager = _PoolManager(alloc, bps, block_k) if paged else None
+        health = ServeHealth()
+        inj = faults_mod.FaultInjector(fault_plan, health)
+        watchdog = strag.StragglerWatchdog(window=50, threshold=3.0,
+                                           min_history=4,
+                                           on_straggler=health.straggler)
         kbox = [jax.random.PRNGKey(sample_seed)]
 
         def select(logits):
@@ -179,68 +336,213 @@ def serve_paged(params, cfg, prompts: List[np.ndarray], *, slots: int,
 
         stats: Dict = {"batch_prefills": 0, "slot_prefills": 0,
                        "decode_steps": 0, "step_s": []}
-        queue = list(range(requests))
+        queue = deque(range(requests))
         generated: Dict[int, List[int]] = {}
         finished: Dict[int, List[int]] = {}
-        slot_blocks: Dict[int, List[int]] = {}
+        expired: Dict[int, List[int]] = {}
+        failed: Dict[int, List[int]] = {}
+        resume_prefix: Dict[int, List[int]] = {}
+        replay: Dict[int, List[int]] = {}
+        admit_step0: Dict[int, int] = {}    # first admission, for deadlines
+        admit_seq: Dict[int, int] = {}      # per-slot admission order
         active: Dict[int, int] = {}
+        seq_counter = [0]
+        calib_rid = [None]                  # request that fixed the scales
+        tokens = jnp.zeros((slots,), jnp.int32)
+        step = 0
+
+        def free_slot(slot):
+            nonlocal cache
+            if paged:
+                pager.release(slot)
+            cache = release_step(cache, jnp.int32(slot))
+
+        def preempt(vslot, *, reason):
+            nonlocal cache
+            rid = active.pop(vslot)
+            pre = generated.pop(rid) + replay.pop(rid, [])
+            resume_prefix[rid] = pre
+            free_slot(vslot)
+            queue.appendleft(rid)           # victims resume first
+            health.count("preemptions")
+            health.event("preempt", step, rid=rid, slot=vslot,
+                         policy=preempt_policy, reason=reason,
+                         prefix_tokens=len(pre))
+            if verbose:
+                print(f"[serve] step {step}: preempted request {rid} "
+                      f"(slot {vslot}, {reason})", flush=True)
 
         t0 = time.time()
-        # ---- first wave: one batched prefill, per-slot block writes --------
-        for slot in range(slots):
-            active[slot] = queue.pop(0)
-            slot_blocks[slot] = alloc.alloc(bps)
-        block_ids = jnp.asarray(np.stack([slot_blocks[s]
-                                          for s in range(slots)]), jnp.int32)
-        tokens_in = jnp.asarray(np.stack([prompts[active[s]]
-                                          for s in range(slots)]))
-        last, cache = wave_prefill(params, tokens_in, cache,
-                                   jnp.arange(slots, dtype=jnp.int32),
-                                   block_ids)
-        stats["batch_prefills"] += 1
-        tokens = select(last)
-        for slot in range(slots):
-            generated[active[slot]] = [int(tokens[slot])]
+        while active or queue:
+            ts_iter = time.perf_counter()
+            prefills0 = stats["slot_prefills"]
+            preempts0 = health.counters["preemptions"]
+            inj.on_step(step)
+            if paged:
+                inj.squeeze_pool(step, alloc)
 
-        # ---- continuous batching: decode + per-slot admission --------------
-        while active:
-            ts = time.perf_counter()
-            logits, cache = decode_step(params, tokens, cache)
-            tokens = select(logits)
-            tok_host = np.asarray(tokens)
-            stats["step_s"].append(time.perf_counter() - ts)
-            stats["decode_steps"] += 1
-            for slot in sorted(active):
-                rid = active[slot]
-                generated[rid].append(int(tok_host[slot]))
-                if len(generated[rid]) < gens[rid]:
-                    continue
-                # retire: recycle blocks, park the slot on the trash block
-                finished[rid] = generated.pop(rid)
-                del active[slot]
-                alloc.free(slot_blocks.pop(slot))
-                cache = release_step(cache, jnp.int32(slot))
-                if not queue:
-                    continue
-                # admit: per-slot prefill into recycled blocks; the other
-                # slots' caches are untouched and keep decoding
-                nid = queue.pop(0)
-                slot_blocks[slot] = alloc.alloc(bps)
-                last1, cache = slot_prefill(
-                    params, jnp.asarray(prompts[nid])[None], cache,
-                    jnp.asarray([slot], jnp.int32),
-                    jnp.asarray([slot_blocks[slot]], jnp.int32))
+            # ---- growth: cover this step's write position for every slot;
+            # on exhaustion, preempt a victim and retry --------------------
+            if paged:
+                for slot in list(sorted(active)):
+                    if slot not in active:
+                        continue            # preempted by an earlier grower
+                    rid = active[slot]
+                    upto = len(prompts[rid]) + len(generated[rid])
+                    while pager.short(slot, upto) > 0:
+                        try:
+                            start, ids = pager.grow(slot,
+                                                    pager.short(slot, upto))
+                        except paged_kv.BlockAllocationError as e:
+                            health.event("pool_pressure", step, slot=slot,
+                                         requested=e.requested, free=e.free,
+                                         live=e.live,
+                                         high_water=e.high_water)
+                            victim = _pick_victim(
+                                active, slot, preempt_policy, admit_seq,
+                                lambda s: gens[active[s]]
+                                - len(generated[active[s]]))
+                            if victim is None:
+                                # sole active slot: park it in the queue and
+                                # wait for the pool (fault hold) to drain
+                                preempt(slot, reason="self")
+                                break
+                            preempt(victim, reason="growth")
+                            continue
+                        for j, b in enumerate(ids):
+                            cache = grow_step(cache, jnp.int32(slot),
+                                              jnp.int32(start + j),
+                                              jnp.int32(b))
+
+            # ---- admission: fill idle slots from the queue ---------------
+            idle = [s for s in range(slots) if s not in active]
+            while queue and idle:
+                rid = queue[0]
+                s_len = len(prompts[rid])
+                # cover the prompt plus this step's decode write
+                need = paged_kv.blocks_per_seq(s_len + 1, block_k)
+                if paged and alloc.free_count < need:
+                    health.count("admission_stalls")
+                    health.event("admission_stall", step, rid=rid,
+                                 need=need, free=alloc.free_count)
+                    break
+                queue.popleft()
+                slot = idle.pop(0)
+                if paged:
+                    row = pager.admit_row(slot, s_len + 1)
+                else:
+                    row = np.full((bps,), paged_kv.TRASH_BLOCK, np.int32)
+                if calib_rid[0] is None:
+                    calib_rid[0] = rid
+                fn = calib_prefill if rid == calib_rid[0] else slot_prefill
+                last1, cache = fn(params, jnp.asarray(prompts[rid])[None],
+                                  cache, jnp.asarray([slot], jnp.int32),
+                                  jnp.asarray(row[None], jnp.int32))
                 stats["slot_prefills"] += 1
-                active[slot] = nid
-                first = int(select(last1)[0])
-                generated[nid] = [first]
+                health.count("admissions")
+                active[slot] = rid
+                admit_seq[slot] = seq_counter[0]
+                seq_counter[0] += 1
+                if rid in resume_prefix:
+                    pre = resume_prefix.pop(rid)
+                    generated[rid] = [pre[0]]
+                    replay[rid] = pre[1:]
+                    first = pre[0]
+                    health.count("resumes")
+                    health.count("resumed_tokens_replayed", len(pre) - 1)
+                    health.event("resume", step, rid=rid, slot=slot,
+                                 prefix_tokens=len(pre))
+                else:
+                    admit_step0[rid] = step
+                    t1, ok1 = select(last1)
+                    if not bool(np.asarray(ok1)[0]):
+                        failed[rid] = []
+                        del active[slot]
+                        free_slot(slot)
+                        idle.insert(0, slot)
+                        health.count("nan_retired")
+                        health.event("nan_retired", step, rid=rid, slot=slot,
+                                     where="prefill")
+                        continue
+                    first = int(np.asarray(t1)[0])
+                    generated[rid] = [first]
                 tokens = splice_token(tokens, jnp.int32(slot),
                                       jnp.int32(first))
 
-        stats["leaked_blocks"] = alloc.live_count
+            if not active:
+                step += 1
+                if queue:
+                    continue                # stalled; pool will drain
+                break
+
+            # ---- decode one token per slot -------------------------------
+            ts = time.perf_counter()
+            logits, cache = decode_step(params, tokens, cache)
+            logits = inj.corrupt_logits(step, logits)
+            toks, okv = select(logits)
+            tok_host, ok_host = jax.device_get((toks, okv))
+            stats["step_s"].append(time.perf_counter() - ts)
+            stats["decode_steps"] += 1
+            tokens = toks
+
+            for slot in sorted(active):
+                rid = active[slot]
+                if not ok_host[slot]:
+                    # NaN/Inf logits: retire the request, keep the batch up
+                    failed[rid] = generated.pop(rid)
+                    del active[slot]
+                    replay.pop(rid, None)
+                    free_slot(slot)
+                    health.count("nan_retired")
+                    health.event("nan_retired", step, rid=rid, slot=slot,
+                                 where="decode")
+                    continue
+                if replay.get(rid):
+                    nxt = replay[rid].pop(0)
+                    if not replay[rid]:
+                        del replay[rid]
+                    if nxt != int(tok_host[slot]):
+                        # greedy replay re-derives the recorded token; only
+                        # a sampled run actually needs the splice
+                        tokens = splice_token(tokens, jnp.int32(slot),
+                                              jnp.int32(nxt))
+                else:
+                    nxt = int(tok_host[slot])
+                generated[rid].append(nxt)
+                if len(generated[rid]) >= gens[rid]:
+                    finished[rid] = generated.pop(rid)
+                    del active[slot]
+                    replay.pop(rid, None)
+                    free_slot(slot)
+                elif (deadline_steps is not None
+                      and step - admit_step0[rid] + 1 >= deadline_steps):
+                    expired[rid] = generated.pop(rid)
+                    del active[slot]
+                    replay.pop(rid, None)
+                    free_slot(slot)
+                    health.count("deadline_cancelled")
+                    health.event("deadline", step, rid=rid, slot=slot,
+                                 tokens=len(expired[rid]))
+            watchdog.observe(
+                step, time.perf_counter() - ts_iter,
+                expect_slow=(stats["slot_prefills"] != prefills0
+                             or health.counters["preemptions"] != preempts0))
+            step += 1
+
+        if paged:
+            inj.drain(alloc)
+            health.pool("kv", alloc)
+        stats["leaked_blocks"] = alloc.live_count if paged else 0
         stats["finished"] = finished
+        stats["expired"] = expired
+        stats["failed"] = failed
+        stats["preemptions"] = health.counters["preemptions"]
+        stats["resumes"] = health.counters["resumes"]
+        stats["health"] = health.to_dict()
+        stats["health"]["straggler_summary"] = watchdog.summary()
         # analytic decode-read traffic (int8 K+V, mean live-block occupancy)
         nl = cfg.n_layers
+        prompt_len = len(prompts[0])
         mean_gen = sum(gens) // (2 * len(gens))
         mean_blocks = paged_kv.blocks_per_seq(prompt_len + mean_gen, block_k)
         stats["kv_bytes_per_step"] = (2 * nl * slots * cfg.n_kv_heads
@@ -289,8 +591,8 @@ def serve_dense(params, cfg, prompts: List[np.ndarray], *, slots: int,
         w_seqs = jnp.zeros((slots, seq_pad), jnp.int32)
         w_lens = jnp.full((slots,), prompt_len, jnp.int32)
         _, w_cache = reprefill_step(params, w_seqs, w_lens)
-        w_out, _ = decode_step(params, jnp.argmax(w_last, -1).astype(
-            jnp.int32), w_cache)
+        w_sel, _ = sampler(w_last, jax.random.PRNGKey(0))
+        w_out, _ = decode_step(params, w_sel.astype(jnp.int32), w_cache)
         jax.block_until_ready(w_out)
 
     def _run() -> Dict:
@@ -304,9 +606,11 @@ def serve_dense(params, cfg, prompts: List[np.ndarray], *, slots: int,
 
         def select(logits):
             if temperature == 0.0:
-                return sampler(logits, kbox[0])      # key unused
+                toks, _ = sampler(logits, kbox[0])   # key unused
+                return toks
             kbox[0], sub = jax.random.split(kbox[0])
-            return sampler(logits, sub)
+            toks, _ = sampler(logits, sub)
+            return toks
 
         t0 = time.time()
         for slot in range(slots):
@@ -394,9 +698,14 @@ def serve_speculative(params, cfg, prompts: List[np.ndarray], *, slots: int,
                       draft=None, block_k: int = 32,
                       max_len: Optional[int] = None,
                       gens: Optional[Sequence[int]] = None,
+                      pool_blocks: Optional[int] = None,
+                      preempt_policy: str = "newest",
+                      deadline_steps: Optional[int] = None,
+                      fault_plan: Optional["faults_mod.FaultPlan"] = None,
                       warmup: bool = False, repeats: int = 1,
                       verbose: bool = False) -> Dict:
-    """Greedy speculative scheduler, drafter-aware about cache sharing.
+    """Greedy speculative scheduler, drafter-aware about cache sharing,
+    with the same demand-paged over-commit machinery as :func:`serve_paged`.
 
     Per round, for every slot at once: the drafter runs ``gamma`` greedy
     steps fused into one ``lax.scan`` launch (`steps.make_draft_loop`), the
@@ -408,23 +717,38 @@ def serve_speculative(params, cfg, prompts: List[np.ndarray], *, slots: int,
     bit-correct because the target itself wrote it during verify.
 
     Cache layout depends on the drafter.  A *distinct* drafter gets its own
-    paged cache (its K/V comes from different weights), which doubles every
-    prefill / truncate / release.  Self-drafting (``draft=None``) shares
-    the target's cache: the draft loop appends its K/V at positions
-    ``len..len+gamma``, a length-only truncation rewinds to ``len``, and the
-    verify launch *overwrites* those same positions with target-computed
-    K/V before anything past ``len`` is ever read again — so after the
-    accept-truncation the cache holds exclusively target-written entries,
-    exactly as in the two-cache layout, at half the prefill/bookkeeping
-    cost and half the pool memory.
+    paged cache and block pool (its K/V comes from different weights), which
+    doubles every prefill / grow / truncate / release — the scheduler keeps
+    the two block tables in lockstep (grown, rolled back, and released
+    together), and asserts a self-drafter (shared cache) never owns drafter
+    blocks at all.  Self-drafting (``draft=None``) shares the target's
+    cache: the draft loop appends its K/V at positions ``len..len+gamma``,
+    a length-only truncation rewinds to ``len``, and the verify launch
+    *overwrites* those same positions with target-computed K/V before
+    anything past ``len`` is ever read again.
+
+    Demand paging note: each round needs coverage for ``len + gamma``
+    positions (the unaccepted draft tail briefly occupies blocks before the
+    rollback).  Pool pressure has a gentler first tier than eviction: a slot
+    that cannot grow its speculation window **parks** for the round — it
+    skips draft/verify acceptance, keeps its accepted prefix resident, and
+    gives back its own over-coverage tail (`paged_kv.tail_blocks` on host,
+    `paged_kv.rollback_slot` on device, applied to *both* block tables in
+    lockstep) — and retries next round.  Never another slot's tail: a
+    co-resident slot's gamma coverage is exactly what its in-flight draft
+    writes into, so reclaiming it would corrupt that stream.  Only when
+    every other active slot is already parked does the scheduler escalate
+    to preempting a victim.
 
     Correctness contract: emitted tokens are **bitwise identical** to the
     non-speculative greedy path for *any* drafter, because every accepted
     token is checked against (and every correction token is) the target's
-    own argmax at exactly the sequential cache state.  ``draft`` is a
+    own argmax at exactly the sequential cache state.  The same argument
+    makes preemption recovery exact: a resumed request re-emits its greedy
+    continuation from the re-prefilled prompt, which the scheduler asserts
+    against the recorded prefix token-for-token.  ``draft`` is a
     ``(draft_params, draft_cfg)`` pair; ``None`` self-drafts with the full
-    target (see :func:`make_self_draft`).  Continuous batching (per-slot
-    retire + admit) matches :func:`serve_paged`.
+    target (see :func:`make_self_draft`).
     """
     self_draft = draft is None
     draft_params, dcfg = draft if draft is not None else (params, cfg)
@@ -441,20 +765,33 @@ def serve_speculative(params, cfg, prompts: List[np.ndarray], *, slots: int,
         # the post-verify truncation
         max_len = prompt_len + max(gens) + gamma + 8
     bps = paged_kv.blocks_per_seq(max_len, block_k)
+    if pool_blocks is not None and pool_blocks < 1 + bps:
+        raise ValueError(
+            f"pool_blocks={pool_blocks} cannot hold one sequence: need "
+            f">= 1 + {bps} (trash + blocks_per_seq(max_len={max_len}))")
+    pool_size = pool_blocks if pool_blocks is not None else 1 + slots * bps
+    assert preempt_policy in ("newest", "longest"), preempt_policy
 
-    t_wave = jax.jit(st.make_paged_prefill_step(cfg, calibrate=True),
-                     donate_argnums=(2,))
+    t_calib = jax.jit(st.make_paged_prefill_step(cfg, calibrate=True),
+                      donate_argnums=(2,))
     t_slot = jax.jit(st.make_paged_prefill_step(cfg, calibrate=False),
                      donate_argnums=(2,))
-    d_wave = d_slot = None
+    d_calib = d_slot = None
     if not self_draft:
-        d_wave = jax.jit(st.make_paged_prefill_step(dcfg, calibrate=True),
-                         donate_argnums=(2,))
+        d_calib = jax.jit(st.make_paged_prefill_step(dcfg, calibrate=True),
+                          donate_argnums=(2,))
         d_slot = jax.jit(st.make_paged_prefill_step(dcfg, calibrate=False),
                          donate_argnums=(2,))
     draft_loop = jax.jit(st.make_draft_loop(dcfg, gamma),
                          donate_argnums=(2,))
     verify_step = jax.jit(st.make_verify_step(cfg), donate_argnums=(2,))
+
+    @jax.jit
+    def select_targets(vlogits):
+        # argmax + finite-guard in one launch: a NaN anywhere in a slot's
+        # verify logits retires that slot instead of emitting garbage
+        return (jnp.argmax(vlogits, axis=-1).astype(jnp.int32),
+                jnp.isfinite(vlogits).all(axis=(-1, -2)))
 
     @functools.partial(jax.jit, donate_argnums=(0,))
     def truncate_step(cache, new_lens):
@@ -468,91 +805,279 @@ def serve_speculative(params, cfg, prompts: List[np.ndarray], *, slots: int,
         cache["kv"] = paged_kv.release_slot(cache["kv"], slot)
         return cache
 
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def grow_step(cache, slot, idx, block):
+        kv = cache["kv"]
+        return dict(cache, kv=dict(
+            kv, block_table=kv["block_table"].at[slot, idx].set(block)))
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def rollback_step(cache, slot, new_len):
+        # block-level rollback: trash the tail table entries past new_len
+        # (the host frees the ids via paged_kv.tail_blocks)
+        cache = dict(cache, length=cache["length"].at[slot].set(new_len))
+        cache["kv"] = paged_kv.rollback_slot(cache["kv"], slot, new_len)
+        return cache
+
     if warmup:
-        w_tok = jnp.asarray(np.stack([prompts[0]] * slots))
-        w_sids = jnp.arange(slots, dtype=jnp.int32)
-        w_blocks = jnp.arange(1, 1 + slots * bps,
-                              dtype=jnp.int32).reshape(slots, bps)
-        w_last, w_cache = t_wave(
-            params, w_tok, T.make_paged_cache(cfg, slots, max_len,
-                                              block_k=block_k),
-            w_sids, w_blocks)
+        w_cache = T.make_paged_cache(cfg, slots, max_len, block_k=block_k,
+                                     num_blocks=pool_size)
+        w_row = np.full((bps,), paged_kv.TRASH_BLOCK, np.int32)
+        w_row[:1] = 1
+        w_sid = jnp.asarray([0], jnp.int32)
+        w_rowj = jnp.asarray(w_row[None], jnp.int32)
+        w_prompt = jnp.asarray(prompts[0])[None]
+        w_last, w_cache = t_calib(params, w_prompt, w_cache, w_sid, w_rowj)
+        _, w_cache = t_slot(params, w_prompt, w_cache, w_sid, w_rowj)
+        w_cache = grow_step(w_cache, jnp.int32(0), jnp.int32(1), jnp.int32(2))
         w_pend = jnp.argmax(w_last, -1).astype(jnp.int32)
-        w_lens = jnp.full((slots,), prompt_len, jnp.int32)
+        w_pend = jnp.broadcast_to(w_pend[0], (slots,))
+        w_lens = jnp.zeros((slots,), jnp.int32).at[0].set(prompt_len)
+        w_dcache = None
         if self_draft:
             w_drafts, w_cache = draft_loop(params, w_pend, w_cache)
             w_cache = truncate_step(w_cache, w_lens)
         else:
-            _, w_dcache = d_wave(
-                draft_params, w_tok, T.make_paged_cache(dcfg, slots, max_len,
-                                                        block_k=block_k),
-                w_sids, w_blocks)
+            w_dcache = T.make_paged_cache(dcfg, slots, max_len,
+                                          block_k=block_k,
+                                          num_blocks=pool_size)
+            _, w_dcache = d_calib(draft_params, w_prompt, w_dcache, w_sid,
+                                  w_rowj)
+            _, w_dcache = d_slot(draft_params, w_prompt, w_dcache, w_sid,
+                                 w_rowj)
+            w_dcache = grow_step(w_dcache, jnp.int32(0), jnp.int32(1),
+                                 jnp.int32(2))
             w_drafts, w_dcache = draft_loop(draft_params, w_pend, w_dcache)
+            w_dcache = truncate_step(w_dcache, w_lens)
+            w_dcache = rollback_step(w_dcache, jnp.int32(0),
+                                     jnp.int32(prompt_len))
+            w_dcache = release_step(w_dcache, jnp.int32(0))
         w_in = jnp.concatenate([w_pend[:, None], w_drafts[:, :-1]], axis=1)
         w_vlog, w_cache = verify_step(params, w_in, w_cache)
+        select_targets(w_vlog)
         w_cache = truncate_step(w_cache, w_lens)
-        w_l1, w_cache = t_slot(params, jnp.asarray(prompts[0])[None],
-                               w_cache, jnp.asarray([0], jnp.int32),
-                               w_blocks[:1])
+        w_cache = rollback_step(w_cache, jnp.int32(0), jnp.int32(prompt_len))
         w_cache = release_step(w_cache, jnp.int32(0))
-        if not self_draft:
-            w_dcache = truncate_step(w_dcache, w_lens)
-            _, w_dcache = d_slot(draft_params, jnp.asarray(prompts[0])[None],
-                                 w_dcache, jnp.asarray([0], jnp.int32),
-                                 w_blocks[:1])
-            w_dcache = release_step(w_dcache, jnp.int32(0))
-        jax.block_until_ready((w_vlog, w_l1))
+        jax.block_until_ready(w_vlog)
 
     def _run() -> Dict:
-        cache = T.make_paged_cache(cfg, slots, max_len, block_k=block_k)
-        alloc = paged_kv.BlockAllocator(1 + slots * bps)
-        dcache = dalloc = None
+        cache = T.make_paged_cache(cfg, slots, max_len, block_k=block_k,
+                                   num_blocks=pool_size)
+        alloc = paged_kv.BlockAllocator(pool_size)
+        pager = _PoolManager(alloc, bps, block_k)
+        dcache = dalloc = d_pager = None
         if not self_draft:
-            dcache = T.make_paged_cache(dcfg, slots, max_len, block_k=block_k)
-            dalloc = paged_kv.BlockAllocator(1 + slots * bps)
+            dcache = T.make_paged_cache(dcfg, slots, max_len,
+                                        block_k=block_k,
+                                        num_blocks=pool_size)
+            dalloc = paged_kv.BlockAllocator(pool_size)
+            d_pager = _PoolManager(dalloc, bps, block_k)
+        health = ServeHealth()
+        inj = faults_mod.FaultInjector(fault_plan, health)
+        watchdog = strag.StragglerWatchdog(window=50, threshold=3.0,
+                                           min_history=4,
+                                           on_straggler=health.straggler)
         stats: Dict = {"batch_prefills": 0, "slot_prefills": 0,
                        "decode_steps": 0, "draft_steps": 0,
                        "verify_steps": 0, "drafts_proposed": 0,
                        "drafts_accepted": 0, "gamma": gamma,
                        "slot_accept": {s: [0, 0] for s in range(slots)},
                        "step_s": []}
-        queue = list(range(requests))
+        queue = deque(range(requests))
         generated: Dict[int, List[int]] = {}
         finished: Dict[int, List[int]] = {}
-        slot_blocks: Dict[int, List[int]] = {}
-        dslot_blocks: Dict[int, List[int]] = {}
+        expired: Dict[int, List[int]] = {}
+        failed: Dict[int, List[int]] = {}
+        resume_prefix: Dict[int, List[int]] = {}
+        expect: Dict[int, List[int]] = {}   # recorded prefix, re-asserted
+        admit_step0: Dict[int, int] = {}
+        admit_seq: Dict[int, int] = {}
         active: Dict[int, int] = {}
+        seq_counter = [0]
+        calib_rid = [None]
+        cur_lens = np.zeros((slots,), np.int32)
+        pend_h = np.zeros((slots,), np.int32)
+        step = 0
+
+        def free_slot(slot):
+            nonlocal cache, dcache
+            pager.release(slot)
+            cache = release_step(cache, jnp.int32(slot))
+            if not self_draft:
+                d_pager.release(slot)
+                dcache = release_step(dcache, jnp.int32(slot))
+            # shared-cache drafters must never hold their own blocks; a
+            # distinct drafter's table stays in lockstep with the target's
+            assert (d_pager is None or
+                    set(d_pager.owned) == set(pager.owned))
+            cur_lens[slot] = 0
+
+        def preempt(vslot, *, reason):
+            rid = active.pop(vslot)
+            pre = generated.pop(rid)
+            resume_prefix[rid] = pre
+            expect.pop(rid, None)
+            free_slot(vslot)
+            queue.appendleft(rid)
+            health.count("preemptions")
+            health.event("preempt", step, rid=rid, slot=vslot,
+                         policy=preempt_policy, reason=reason,
+                         prefix_tokens=len(pre))
+            if verbose:
+                print(f"[serve-spec] step {step}: preempted request {rid} "
+                      f"(slot {vslot}, {reason})", flush=True)
+
+        parked: set = set()             # slots skipping this round's draft
+
+        def park(slot):
+            """Gentle pressure tier: skip this slot's speculation for the
+            round and give back its own over-coverage tail (blocks past the
+            accepted prefix) on every pool.  Its own tail only — another
+            slot's gamma coverage is what that slot's in-flight draft writes
+            into this round, so reclaiming it would corrupt that stream."""
+            nonlocal cache, dcache
+            keep = int(cur_lens[slot])
+            freed = pager.reclaim_tail(slot, keep)
+            if not self_draft:
+                freed += d_pager.reclaim_tail(slot, keep)
+            cache = rollback_step(cache, jnp.int32(slot), jnp.int32(keep))
+            if not self_draft:
+                dcache = rollback_step(dcache, jnp.int32(slot),
+                                       jnp.int32(keep))
+            parked.add(slot)
+            health.count("spec_parks")
+            health.event("park", step, slot=slot, rid=active[slot],
+                         freed=freed)
+
+        def grow_all(slot, upto, pg, cache_name):
+            """Cover ``upto`` positions for one slot on one pool; park,
+            then preempt, under pressure.  Returns False once the slot is
+            out of the round (parked or preempted)."""
+            nonlocal cache, dcache
+            while slot in active and pg.short(slot, upto) > 0:
+                try:
+                    start, ids = pg.grow(slot, pg.short(slot, upto))
+                except paged_kv.BlockAllocationError as e:
+                    health.event("pool_pressure", step, slot=slot,
+                                 pool=cache_name, requested=e.requested,
+                                 free=e.free, live=e.live,
+                                 high_water=e.high_water)
+                    others = [s for s in active
+                              if s != slot and s not in parked]
+                    if others:
+                        # someone else is still speculating this round, so
+                        # sitting it out cannot stall the whole batch
+                        park(slot)
+                        return False
+                    victim = _pick_victim(
+                        active, slot, preempt_policy, admit_seq,
+                        lambda s: gens[active[s]]
+                        - len(generated[active[s]]))
+                    if victim is None:
+                        preempt(slot, reason="self")
+                        return False
+                    preempt(victim, reason="growth")
+                    parked.discard(victim)
+                    continue
+                for j, b in enumerate(ids):
+                    if cache_name == "kv":
+                        cache = grow_step(cache, jnp.int32(slot),
+                                          jnp.int32(start + j),
+                                          jnp.int32(b))
+                    else:
+                        dcache = grow_step(dcache, jnp.int32(slot),
+                                           jnp.int32(start + j),
+                                           jnp.int32(b))
+            return slot in active and slot not in parked
 
         t0 = time.time()
-        # ---- first wave: batched prefill (of BOTH models if distinct) ------
-        for slot in range(slots):
-            active[slot] = queue.pop(0)
-            slot_blocks[slot] = alloc.alloc(bps)
-            if not self_draft:
-                dslot_blocks[slot] = dalloc.alloc(bps)
-        slot_ids = jnp.arange(slots, dtype=jnp.int32)
-        tokens_in = jnp.asarray(np.stack([prompts[active[s]]
-                                          for s in range(slots)]))
-        last, cache = t_wave(params, tokens_in, cache, slot_ids,
-                             jnp.asarray(np.stack([slot_blocks[s]
-                                                   for s in range(slots)]),
-                                         jnp.int32))
-        stats["batch_prefills"] += 1
-        if not self_draft:
-            _, dcache = d_wave(draft_params, tokens_in, dcache, slot_ids,
-                               jnp.asarray(np.stack([dslot_blocks[s]
-                                                     for s in range(slots)]),
-                                           jnp.int32))
-            stats["batch_prefills"] += 1
-        pending = jnp.argmax(last, axis=-1).astype(jnp.int32)
-        # host twin of the accepted-prefix lengths; for self-draft it is
-        # what rewinds the shared cache between draft append and verify
-        cur_lens = np.full((slots,), prompt_len, np.int32)
-        for slot in range(slots):
-            generated[active[slot]] = [int(pending[slot])]
+        while active or queue:
+            ts_iter = time.perf_counter()
+            prefills0 = stats["slot_prefills"]
+            preempts0 = health.counters["preemptions"]
+            inj.on_step(step)
+            inj.squeeze_pool(step, alloc)
 
-        # ---- draft -> verify -> accept rounds ------------------------------
-        while active:
+            # ---- growth: every slot needs len + gamma coverage this round
+            parked.clear()
+            for slot in list(sorted(active)):
+                if slot not in active:
+                    continue
+                upto = int(cur_lens[slot]) + gamma
+                if not grow_all(slot, upto, pager, "kv"):
+                    continue
+                if not self_draft:
+                    grow_all(slot, upto, d_pager, "draft_kv")
+
+            # ---- admission -----------------------------------------------
+            idle = [s for s in range(slots) if s not in active]
+            while queue and idle:
+                rid = queue[0]
+                s_len = len(prompts[rid])
+                need = paged_kv.blocks_per_seq(s_len + gamma, block_k)
+                pools_ok = alloc.free_count >= need and (
+                    self_draft or dalloc.free_count >= need)
+                if not pools_ok:
+                    health.count("admission_stalls")
+                    health.event("admission_stall", step, rid=rid,
+                                 need=need, free=alloc.free_count)
+                    break
+                queue.popleft()
+                slot = idle.pop(0)
+                row = pager.admit_row(slot, s_len + gamma)
+                if calib_rid[0] is None:
+                    calib_rid[0] = rid
+                fn = t_calib if rid == calib_rid[0] else t_slot
+                sid = jnp.asarray([slot], jnp.int32)
+                prompt = jnp.asarray(prompts[rid])[None]
+                last1, cache = fn(params, prompt, cache, sid,
+                                  jnp.asarray(row[None], jnp.int32))
+                stats["slot_prefills"] += 1
+                if not self_draft:
+                    drow = d_pager.admit_row(slot, s_len + gamma)
+                    dfn = d_calib if rid == calib_rid[0] else d_slot
+                    _, dcache = dfn(draft_params, prompt, dcache, sid,
+                                    jnp.asarray(drow[None], jnp.int32))
+                    stats["slot_prefills"] += 1
+                health.count("admissions")
+                active[slot] = rid
+                admit_seq[slot] = seq_counter[0]
+                seq_counter[0] += 1
+                first_logits = np.asarray(last1[0])
+                if not np.isfinite(first_logits).all():
+                    failed[rid] = []
+                    del active[slot]
+                    free_slot(slot)
+                    idle.insert(0, slot)
+                    health.count("nan_retired")
+                    health.event("nan_retired", step, rid=rid, slot=slot,
+                                 where="prefill")
+                    continue
+                first = int(first_logits.argmax())
+                if rid in resume_prefix:
+                    pre = resume_prefix.pop(rid)
+                    assert first == pre[0], (
+                        f"resume divergence for request {rid}: re-prefill "
+                        f"token {first} != recorded {pre[0]}")
+                    expect[rid] = pre
+                    health.count("resumes")
+                    health.count("resumed_tokens_replayed", len(pre) - 1)
+                    health.event("resume", step, rid=rid, slot=slot,
+                                 prefix_tokens=len(pre))
+                else:
+                    admit_step0[rid] = step
+                generated[rid] = [first]
+                pend_h[slot] = first
+                cur_lens[slot] = s_len
+
+            if not active:
+                step += 1
+                if queue:
+                    continue
+                break
+
+            # ---- one draft -> verify -> accept round ---------------------
+            pending = jnp.asarray(pend_h)
             ts = time.perf_counter()
             if self_draft:
                 drafts, cache = draft_loop(params, pending, cache)
@@ -563,17 +1088,36 @@ def serve_speculative(params, cfg, prompts: List[np.ndarray], *, slots: int,
             verify_in = jnp.concatenate([pending[:, None], drafts[:, :-1]],
                                         axis=1)
             vlogits, cache = verify_step(params, verify_in, cache)
-            targets = jnp.argmax(vlogits, axis=-1).astype(jnp.int32)
-            drafts_h, targets_h = jax.device_get((drafts, targets))
+            vlogits = inj.corrupt_logits(step, vlogits)
+            targets, okv = select_targets(vlogits)
+            drafts_h, targets_h, ok_h = jax.device_get(
+                (drafts, targets, okv))
             stats["step_s"].append(time.perf_counter() - ts)
             stats["draft_steps"] += 1
             stats["verify_steps"] += 1
 
             new_lens = np.zeros((slots,), np.int32)
-            pend_h = np.asarray(pending).copy()
             retiring: List[int] = []
             for slot in sorted(active):
                 rid = active[slot]
+                if slot in parked:
+                    # sat the round out under pool pressure: nothing
+                    # emitted, prefix stays resident, retries next round.
+                    # Its draft row read through trashed tail entries, so
+                    # its (discarded) logits are exempt from the NaN guard.
+                    new_lens[slot] = cur_lens[slot]
+                    continue
+                if not ok_h[slot]:
+                    failed[rid] = generated.pop(rid)
+                    del active[slot]
+                    expect.pop(rid, None)
+                    health.count("nan_retired")
+                    health.event("nan_retired", step, rid=rid, slot=slot,
+                                 where="verify")
+                    # free after the batch-wide truncate below would also
+                    # work; do it here so the blocks recycle immediately
+                    free_slot(slot)
+                    continue
                 k = 0
                 while (k < gamma
                        and drafts_h[slot, k] == targets_h[slot, k]):
@@ -592,6 +1136,18 @@ def serve_speculative(params, cfg, prompts: List[np.ndarray], *, slots: int,
                 stats["slot_accept"][slot][1] += gamma
                 generated[rid].extend(emit)
                 pend_h[slot] = generated[rid][-1]
+                if rid in expect:
+                    # the bitwise resume contract, asserted live: the
+                    # re-emitted greedy continuation must reproduce the
+                    # prefix recorded before preemption
+                    exp = expect[rid]
+                    got = generated[rid]
+                    n = min(len(exp), len(got))
+                    assert got[:n] == exp[:n], (
+                        f"resume divergence for request {rid} at token "
+                        f"{next(i for i in range(n) if got[i] != exp[i])}")
+                    if len(got) >= len(exp):
+                        del expect[rid]
                 if len(generated[rid]) >= gens[rid]:
                     retiring.append(slot)
                 else:
@@ -608,37 +1164,39 @@ def serve_speculative(params, cfg, prompts: List[np.ndarray], *, slots: int,
             for slot in retiring:
                 rid = active.pop(slot)
                 finished[rid] = generated.pop(rid)
-                alloc.free(slot_blocks.pop(slot))
-                cache = release_step(cache, jnp.int32(slot))
-                if not self_draft:
-                    dalloc.free(dslot_blocks.pop(slot))
-                    dcache = release_step(dcache, jnp.int32(slot))
-                if not queue:
-                    continue
-                nid = queue.pop(0)
-                slot_blocks[slot] = alloc.alloc(bps)
-                sid = jnp.asarray([slot], jnp.int32)
-                prompt = jnp.asarray(prompts[nid])[None]
-                last1, cache = t_slot(
-                    params, prompt, cache, sid,
-                    jnp.asarray([slot_blocks[slot]], jnp.int32))
-                stats["slot_prefills"] += 1
-                if not self_draft:
-                    dslot_blocks[slot] = dalloc.alloc(bps)
-                    _, dcache = d_slot(
-                        draft_params, prompt, dcache, sid,
-                        jnp.asarray([dslot_blocks[slot]], jnp.int32))
-                    stats["slot_prefills"] += 1
-                active[slot] = nid
-                first = int(jnp.argmax(last1[0]))
-                generated[nid] = [first]
-                pend_h[slot] = first
-                cur_lens[slot] = prompt_len
-            pending = jnp.asarray(pend_h)
+                expect.pop(rid, None)
+                free_slot(slot)
 
+            if deadline_steps is not None:
+                for slot in list(sorted(active)):
+                    rid = active[slot]
+                    if step - admit_step0[rid] + 1 >= deadline_steps:
+                        expired[rid] = generated.pop(rid)
+                        del active[slot]
+                        expect.pop(rid, None)
+                        free_slot(slot)
+                        health.count("deadline_cancelled")
+                        health.event("deadline", step, rid=rid, slot=slot,
+                                     tokens=len(expired[rid]))
+            watchdog.observe(
+                step, time.perf_counter() - ts_iter,
+                expect_slow=(stats["slot_prefills"] != prefills0
+                             or health.counters["preemptions"] != preempts0))
+            step += 1
+
+        inj.drain(alloc)
+        health.pool("kv", alloc)
+        if dalloc is not None:
+            health.pool("draft_kv", dalloc)
         stats["leaked_blocks"] = alloc.live_count + (
             dalloc.live_count if dalloc is not None else 0)
         stats["finished"] = finished
+        stats["expired"] = expired
+        stats["failed"] = failed
+        stats["preemptions"] = health.counters["preemptions"]
+        stats["resumes"] = health.counters["resumes"]
+        stats["health"] = health.to_dict()
+        stats["health"]["straggler_summary"] = watchdog.summary()
         stats["accept_rate"] = (stats["drafts_accepted"]
                                 / max(stats["drafts_proposed"], 1))
         total_emitted = sum(len(v) for v in finished.values()) - len(finished)
@@ -667,30 +1225,63 @@ def serve(params, cfg, prompts: List[np.ndarray], *, slots: int, gen: int,
           gens: Optional[Sequence[int]] = None,
           gamma: int = 4, draft=None,
           temperature: float = 0.0, top_p: float = 1.0,
+          pool_blocks: Optional[int] = None,
+          preempt_policy: str = "newest",
+          deadline_steps: Optional[int] = None,
+          fault_plan: Optional["faults_mod.FaultPlan"] = None,
+          metrics_json: Optional[str] = None,
           warmup: bool = False, repeats: int = 1,
           verbose: bool = False) -> Dict:
     """Dispatch on the cache layout / speculative mode; see
     :func:`serve_paged` and :func:`serve_speculative`.  ``draft`` switches
-    to the speculative scheduler (greedy only; paged caches only)."""
+    to the speculative scheduler (greedy only; paged caches only).  The
+    over-commit / chaos knobs (``pool_blocks``, ``preempt_policy``,
+    ``deadline_steps``, ``fault_plan``) are paged-path features;
+    ``metrics_json`` writes the run's health record as one JSON artifact."""
     if draft is not None:
         assert cache_kind == "paged", "speculative serving is paged-only"
         assert temperature == 0.0, "speculative serving is greedy-only"
         draft_pair = None if draft == "self" else draft
-        return serve_speculative(params, cfg, prompts, slots=slots, gen=gen,
-                                 gamma=gamma, draft=draft_pair,
-                                 block_k=block_k, max_len=max_len, gens=gens,
-                                 warmup=warmup, repeats=repeats,
-                                 verbose=verbose)
-    if cache_kind == "paged":
-        return serve_paged(params, cfg, prompts, slots=slots, gen=gen,
-                           block_k=block_k, max_len=max_len, gens=gens,
-                           temperature=temperature, top_p=top_p,
-                           warmup=warmup, repeats=repeats, verbose=verbose)
-    assert cache_kind == "dense", cache_kind
-    return serve_dense(params, cfg, prompts, slots=slots, gen=gen,
-                       max_len=max_len, gens=gens, temperature=temperature,
-                       top_p=top_p, warmup=warmup, repeats=repeats,
-                       verbose=verbose)
+        stats = serve_speculative(
+            params, cfg, prompts, slots=slots, gen=gen, gamma=gamma,
+            draft=draft_pair, block_k=block_k, max_len=max_len, gens=gens,
+            pool_blocks=pool_blocks, preempt_policy=preempt_policy,
+            deadline_steps=deadline_steps, fault_plan=fault_plan,
+            warmup=warmup, repeats=repeats, verbose=verbose)
+    elif cache_kind == "paged":
+        stats = serve_paged(
+            params, cfg, prompts, slots=slots, gen=gen, block_k=block_k,
+            max_len=max_len, gens=gens, temperature=temperature,
+            top_p=top_p, pool_blocks=pool_blocks,
+            preempt_policy=preempt_policy, deadline_steps=deadline_steps,
+            fault_plan=fault_plan, warmup=warmup, repeats=repeats,
+            verbose=verbose)
+    else:
+        assert cache_kind == "dense", cache_kind
+        if pool_blocks is not None or deadline_steps is not None or (
+                fault_plan is not None and fault_plan.armed):
+            raise ValueError("pool_blocks / deadline_steps / faults are "
+                             "paged-path features; --cache dense has no "
+                             "block pool to squeeze")
+        stats = serve_dense(params, cfg, prompts, slots=slots, gen=gen,
+                            max_len=max_len, gens=gens,
+                            temperature=temperature, top_p=top_p,
+                            warmup=warmup, repeats=repeats, verbose=verbose)
+    if metrics_json:
+        doc = dict(stats.get("health", {}))
+        doc["run"] = {k: stats[k] for k in
+                      ("served", "total_tokens", "tok_s", "wall_s",
+                       "decode_steps", "leaked_blocks", "p50_step_ms",
+                       "p99_step_ms") if k in stats}
+        doc["run"]["expired"] = sorted(stats.get("expired", {}))
+        doc["run"]["failed"] = sorted(stats.get("failed", {}))
+        import pathlib
+        p = pathlib.Path(metrics_json)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(json.dumps(doc, indent=2, sort_keys=True))
+        if verbose:
+            print(f"[serve] health metrics -> {p}", flush=True)
+    return stats
 
 
 def main(argv=None) -> None:
@@ -721,6 +1312,22 @@ def main(argv=None) -> None:
                          "required under --draft)")
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling mass (only with --temperature)")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="over-commit: size the KV block pool below the "
+                         "full slots*blocks_per_seq reservation; pool "
+                         "pressure preempts and resumes requests "
+                         "(bitwise-identical outputs under greedy)")
+    ap.add_argument("--preempt-policy", choices=("newest", "longest"),
+                    default="newest",
+                    help="victim choice under pool pressure: most recently "
+                         "admitted slot, or most generation remaining")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="cancel a request still unfinished this many "
+                         "scheduler steps after first admission")
+    ap.add_argument("--metrics-json", default=None,
+                    help="write the run's serving-health record "
+                         "(preemptions, stragglers, faults, pool "
+                         "occupancy) to this path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -753,10 +1360,16 @@ def main(argv=None) -> None:
                 args.seed + 1))
             draft = (dparams, dcfg)
 
+    fault_plan = faults_mod.FaultPlan.from_env()
     stats = serve(params, cfg, prompts, slots=args.slots, gen=args.gen,
                   cache_kind=args.cache, block_k=args.block_k,
                   gamma=args.gamma, draft=draft,
                   temperature=args.temperature, top_p=args.top_p,
+                  pool_blocks=args.pool_blocks,
+                  preempt_policy=args.preempt_policy,
+                  deadline_steps=args.deadline_steps,
+                  fault_plan=fault_plan if fault_plan.armed else None,
+                  metrics_json=args.metrics_json,
                   verbose=True)
     mode = f"{args.cache}+spec" if args.draft else args.cache
     print(f"[{mode}] served {stats['served']} requests, "
@@ -766,6 +1379,17 @@ def main(argv=None) -> None:
           f"{stats['slot_prefills']} slot prefills, "
           f"p50/p99 step {stats['p50_step_ms']:.1f}/"
           f"{stats['p99_step_ms']:.1f} ms)", flush=True)
+    if "health" in stats:
+        c = stats["health"]["counters"]
+        print(f"  health: {c['preemptions']} preemptions, "
+              f"{c['resumes']} resumes "
+              f"({c['resumed_tokens_replayed']} tokens replayed), "
+              f"{c['admission_stalls']} stalls, "
+              f"{c['deadline_cancelled']} expired, "
+              f"{c['nan_retired']} NaN-retired, "
+              f"{c['faults_injected']} faults, "
+              f"{len(stats['health']['stragglers'])} straggler steps",
+              flush=True)
     if args.draft:
         print(f"  speculative: gamma={stats['gamma']} "
               f"accept_rate={stats['accept_rate']:.2f} "

@@ -1,0 +1,185 @@
+"""Fault-injection harness: seeded chaos runs terminate cleanly.
+
+Each fault from ``repro.launch.faults`` is driven through the real serving
+loops and asserted against the scheduler's claimed recovery:
+
+  * forced allocator exhaustion -> preemption/stall, then full bitwise
+    recovery once the stolen blocks return;
+  * scheduler delay -> flagged by the StragglerWatchdog and recorded in
+    the health JSON;
+  * NaN'd decode activations -> the finite-guard retires exactly the
+    poisoned request, everyone else unharmed;
+  * after any chaos run: zero leaked blocks, faults recorded in the
+    metrics artifact.
+
+Plan parsing from the ``REPRO_FAULT_*`` environment (what ``make chaos``
+uses) is covered without subprocesses by passing a fake env dict.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import paged_kv
+from repro.launch import faults as fm
+from repro.launch import steps as st
+from repro.launch import serve as srv
+from repro.launch.health import ServeHealth
+
+
+@pytest.fixture(scope="module")
+def rig():
+    cfg = get_arch("tinyllama_1p1b").smoke.replace(dtype="float32")
+    params = st.init_params_fn(cfg)(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+               for _ in range(6)]
+    gens = [10, 8, 10, 6, 10, 8]
+    baseline = srv.serve(params, cfg, prompts, slots=3, gen=10, gens=gens,
+                         cache_kind="paged", block_k=8, max_len=40)
+    return cfg, params, prompts, gens, baseline
+
+
+# ------------------------------ plan parsing --------------------------------
+
+def test_fault_plan_from_env_parses_all_knobs():
+    env = {"REPRO_FAULT_EXHAUST": "12:6", "REPRO_FAULT_DELAY": "3:0.5",
+           "REPRO_FAULT_NAN": "7:2", "REPRO_FAULT_SEED": "42"}
+    plan = fm.FaultPlan.from_env(env)
+    assert plan.armed
+    assert (plan.exhaust_step, plan.exhaust_hold) == (12, 6)
+    assert (plan.delay_step, plan.delay_seconds) == (3, 0.5)
+    assert (plan.nan_step, plan.nan_slot) == (7, 2)
+    assert plan.seed == 42
+    # defaults for the short forms
+    short = fm.FaultPlan.from_env({"REPRO_FAULT_EXHAUST": "5",
+                                   "REPRO_FAULT_NAN": "9"})
+    assert (short.exhaust_step, short.exhaust_hold) == (5, 4)
+    assert (short.nan_step, short.nan_slot) == (9, 0)
+    assert not fm.FaultPlan.from_env({}).armed
+
+
+def test_injector_steal_and_drain_never_leak():
+    """The exhaustion fault holds blocks hostage, not forever: after the
+    hold they come back, and drain() returns them even if the run ends
+    inside the hold window."""
+    health = ServeHealth()
+    inj = fm.FaultInjector(fm.FaultPlan(exhaust_step=2, exhaust_hold=3),
+                           health)
+    alloc = paged_kv.BlockAllocator(8)
+    inj.squeeze_pool(2, alloc)
+    assert alloc.free_count == 0
+    with pytest.raises(paged_kv.BlockAllocationError):
+        alloc.alloc(1)
+    inj.squeeze_pool(4, alloc)               # still inside the hold
+    assert alloc.free_count == 0
+    inj.squeeze_pool(5, alloc)               # hold expired: blocks return
+    assert alloc.free_count == 7
+    inj.squeeze_pool(6, alloc)               # past the armed step: inert
+    assert alloc.free_count == 7
+    # drain path: steal again, end the run without reaching the release
+    inj2 = fm.FaultInjector(fm.FaultPlan(exhaust_step=0, exhaust_hold=99),
+                            health)
+    inj2.squeeze_pool(0, alloc)
+    assert alloc.free_count == 0
+    inj2.drain(alloc)
+    assert alloc.free_count == 7 and alloc.live_count == 0
+    kinds = [f["kind"] for f in health.faults]
+    assert "exhaust" in kinds and "exhaust_release" in kinds
+
+
+# ------------------------------ end-to-end chaos ----------------------------
+
+def test_chaos_exhaustion_recovers_bitwise(rig):
+    """Steal every free block mid-run: the scheduler preempts/stalls
+    through the hold, then finishes every request with outputs identical
+    to the unfaulted run."""
+    cfg, params, prompts, gens, baseline = rig
+    plan = fm.FaultPlan(exhaust_step=3, exhaust_hold=6)
+    stats = srv.serve(params, cfg, prompts, slots=3, gen=10, gens=gens,
+                      cache_kind="paged", block_k=8, max_len=40,
+                      fault_plan=plan)
+    assert stats["finished"] == baseline["finished"]
+    assert stats["leaked_blocks"] == 0
+    assert stats["preemptions"] > 0
+    assert stats["health"]["counters"]["faults_injected"] >= 1
+    kinds = [f["kind"] for f in stats["health"]["faults"]]
+    assert "exhaust" in kinds
+
+
+def test_chaos_exhaustion_speculative(rig):
+    """Same fault through the speculative scheduler with a tight pool:
+    park/preempt/resume keeps emissions bitwise equal to plain greedy."""
+    cfg, params, prompts, gens, baseline = rig
+    plan = fm.FaultPlan(exhaust_step=2, exhaust_hold=8)
+    stats = srv.serve(params, cfg, prompts, slots=3, gen=10, gens=gens,
+                      cache_kind="paged", block_k=8, max_len=40,
+                      draft="self", gamma=3, pool_blocks=8,
+                      fault_plan=plan)
+    assert stats["finished"] == baseline["finished"]
+    assert stats["leaked_blocks"] == 0
+    assert stats["preemptions"] > 0
+
+
+def test_chaos_delay_trips_watchdog(rig):
+    """An injected stall on one decode step must be flagged against the
+    steady-state decode baseline and land in the health record."""
+    cfg, params, prompts, gens, baseline = rig
+    plan = fm.FaultPlan(delay_step=10, delay_seconds=0.25)
+    stats = srv.serve(params, cfg, prompts, slots=3, gen=10, gens=gens,
+                      cache_kind="paged", block_k=8, max_len=40,
+                      fault_plan=plan)
+    assert stats["finished"] == baseline["finished"]
+    flagged_steps = [r["step"] for r in stats["health"]["stragglers"]]
+    assert 10 in flagged_steps
+    assert stats["health"]["straggler_summary"]["flagged"] >= 1
+
+
+def test_chaos_nan_retires_only_the_poisoned_request(rig):
+    """NaN'd logits on one slot: that request fails (no garbage tokens
+    served), every other request is bitwise unaffected, no leak."""
+    cfg, params, prompts, gens, baseline = rig
+    plan = fm.FaultPlan(nan_step=5, nan_slot=1)
+    stats = srv.serve(params, cfg, prompts, slots=3, gen=10, gens=gens,
+                      cache_kind="paged", block_k=8, max_len=40,
+                      fault_plan=plan)
+    assert len(stats["failed"]) == 1
+    assert stats["served"] == len(prompts) - 1
+    assert stats["leaked_blocks"] == 0
+    for rid, toks in stats["finished"].items():
+        assert toks == baseline["finished"][rid]
+    assert stats["health"]["counters"]["nan_retired"] == 1
+
+
+def test_chaos_nan_speculative_verify(rig):
+    """The finite-guard also covers the speculative verify logits."""
+    cfg, params, prompts, gens, _ = rig
+    plan = fm.FaultPlan(nan_step=2, nan_slot=0)
+    stats = srv.serve(params, cfg, prompts, slots=3, gen=10, gens=gens,
+                      cache_kind="paged", block_k=8, max_len=40,
+                      draft="self", gamma=3, fault_plan=plan)
+    assert len(stats["failed"]) == 1
+    assert stats["leaked_blocks"] == 0
+
+
+def test_chaos_metrics_json_records_everything(rig, tmp_path):
+    """The metrics artifact is the ground truth of a chaos run: counters,
+    fault events, pool accounting, straggler reports — one JSON file."""
+    cfg, params, prompts, gens, _ = rig
+    plan = fm.FaultPlan(exhaust_step=3, exhaust_hold=5, delay_step=12,
+                        delay_seconds=0.2, seed=7)
+    out = tmp_path / "health.json"
+    srv.serve(params, cfg, prompts, slots=3, gen=10, gens=gens,
+              cache_kind="paged", block_k=8, max_len=40,
+              pool_blocks=10, deadline_steps=200, fault_plan=plan,
+              metrics_json=str(out))
+    doc = json.loads(out.read_text())
+    assert doc["counters"]["faults_injected"] >= 2
+    assert doc["pools"]["kv"]["live_at_end"] == 0
+    assert doc["run"]["leaked_blocks"] == 0
+    assert doc["run"]["served"] == len(prompts)
+    kinds = {f["kind"] for f in doc["faults"]}
+    assert "exhaust" in kinds and "delay" in kinds
+    assert any(r["step"] == 12 for r in doc["stragglers"])

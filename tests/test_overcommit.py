@@ -1,0 +1,192 @@
+"""Over-committed serving: demand paging, preemption, resume, deadlines.
+
+The contract under test is the strongest one the scheduler makes: with the
+block pool sized *below* ``slots * blocks_per_seq``, requests get preempted
+(blocks freed, request re-queued) and later resumed (prompt re-prefilled
+through the same executable, recorded prefix replayed through the live
+decode batch), and the final greedy outputs are **bitwise identical** to a
+run that was never preempted — with zero leaked blocks at drain.
+
+Why that can hold at all: per-slot re-prefill reuses the exact executable
+and inputs of the original admission, and a decode row's numerics depend
+only on its own blocks and length, not on slot index or co-resident
+sequences (``test_paged_kv.py`` pins the kernel-level halves of this).
+
+Scenarios are sized against the smoke config so the whole file runs on CPU
+in well under a minute per test.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import paged_kv
+from repro.launch import steps as st
+from repro.launch import serve as srv
+
+
+@pytest.fixture(scope="module")
+def rig():
+    cfg = get_arch("tinyllama_1p1b").smoke.replace(dtype="float32")
+    params = st.init_params_fn(cfg)(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+               for _ in range(8)]
+    gens = [12, 10, 12, 8, 12, 10, 8, 12]
+    baseline = srv.serve(params, cfg, prompts, slots=4, gen=12, gens=gens,
+                         cache_kind="paged", block_k=8, max_len=40)
+    assert baseline["preemptions"] == 0      # full pool: nothing to evict
+    return cfg, params, prompts, gens, baseline
+
+
+@pytest.mark.parametrize("policy", ["newest", "longest"])
+@pytest.mark.parametrize("pool", [13, 7])    # full pool would be 21
+def test_overcommit_bitwise_and_leak_free(rig, policy, pool):
+    """8 requests over 4 slots with a pool for ~2 (or ~1) sequences: the
+    run must preempt, resume every victim, finish all requests with
+    token-for-token identical outputs, and return every block."""
+    cfg, params, prompts, gens, baseline = rig
+    stats = srv.serve(params, cfg, prompts, slots=4, gen=12, gens=gens,
+                      cache_kind="paged", block_k=8, max_len=40,
+                      pool_blocks=pool, preempt_policy=policy)
+    assert stats["preemptions"] > 0          # pressure actually happened
+    assert stats["resumes"] == stats["preemptions"]
+    assert stats["finished"] == baseline["finished"]
+    assert stats["leaked_blocks"] == 0
+    assert stats["batch_prefills"] == 0
+    # every resume re-prefilled: more slot prefills than requests
+    assert stats["slot_prefills"] == len(prompts) + stats["resumes"]
+
+
+def test_exhaustion_mid_decode_serializes_on_minimum_pool(rig):
+    """Minimum legal pool (one max-length sequence + trash): the pool can
+    hold only one resident, so admission stalls serialize the requests —
+    no preemption is ever needed for a lone resident — and every request
+    still completes bitwise with nothing leaked."""
+    cfg, params, prompts, gens, baseline = rig
+    bps = paged_kv.blocks_per_seq(40, 8)
+    stats = srv.serve(params, cfg, prompts[:4], slots=2, gen=12,
+                      gens=gens[:4], cache_kind="paged", block_k=8,
+                      max_len=40, pool_blocks=1 + bps)
+    for rid, toks in stats["finished"].items():
+        assert toks == baseline["finished"][rid]
+    assert len(stats["finished"]) == 4
+    assert stats["leaked_blocks"] == 0
+    assert stats["health"]["counters"]["admission_stalls"] > 0
+
+
+def test_pool_floor_is_enforced(rig):
+    """A pool that cannot hold even one max-length sequence must be
+    rejected up front, not deadlock at runtime."""
+    cfg, params, prompts, gens, _ = rig
+    bps = paged_kv.blocks_per_seq(40, 8)
+    with pytest.raises(ValueError, match="cannot hold one sequence"):
+        srv.serve(params, cfg, prompts, slots=2, gen=12, gens=gens,
+                  cache_kind="paged", block_k=8, max_len=40,
+                  pool_blocks=bps)           # one short of 1 + bps
+
+
+def test_preempt_then_retire_no_double_free(rig):
+    """Churn the allocator hard (tiny pool, staggered retirement) — a
+    double free of a preempted-then-retired slot's blocks would raise
+    BlockAllocationError inside the run; zero live blocks at the end is
+    the leak half of the same invariant."""
+    cfg, params, prompts, gens, baseline = rig
+    for policy in ("newest", "longest"):
+        stats = srv.serve(params, cfg, prompts, slots=3, gen=12, gens=gens,
+                          cache_kind="paged", block_k=8, max_len=40,
+                          pool_blocks=9, preempt_policy=policy)
+        assert stats["finished"] == baseline["finished"]
+        assert stats["leaked_blocks"] == 0
+
+
+def test_growth_at_exact_block_boundary(rig):
+    """Prompt length == a multiple of block_k: the first decode write
+    lands exactly on a fresh block.  Demand paging must allocate the
+    covering block *before* that write — a miss would silently corrupt
+    the trash block and change tokens."""
+    cfg, params, _, _, _ = rig
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+               for _ in range(4)]            # 16 = 2 * block_k exactly
+    full = srv.serve(params, cfg, prompts, slots=2, gen=8,
+                     cache_kind="paged", block_k=8, max_len=32)
+    tight = srv.serve(params, cfg, prompts, slots=2, gen=8,
+                      cache_kind="paged", block_k=8, max_len=32,
+                      pool_blocks=6)         # 1 + blocks_per_seq(32, 8) + 1
+    assert tight["finished"] == full["finished"]
+    assert tight["leaked_blocks"] == 0
+
+
+def test_deadline_cancels_and_survivors_match(rig):
+    """A tight deadline expires the requests that waited in the queue;
+    whatever does finish is still bitwise correct and nothing leaks."""
+    cfg, params, prompts, gens, baseline = rig
+    stats = srv.serve(params, cfg, prompts, slots=3, gen=12, gens=gens,
+                      cache_kind="paged", block_k=8, max_len=40,
+                      deadline_steps=8)
+    assert stats["leaked_blocks"] == 0
+    assert len(stats["expired"]) > 0
+    assert stats["health"]["counters"]["deadline_cancelled"] == \
+        len(stats["expired"])
+    for rid, toks in stats["finished"].items():
+        assert toks == baseline["finished"][rid]
+    assert set(stats["finished"]) | set(stats["expired"]) == set(range(8))
+
+
+def test_overcommit_speculative_bitwise(rig):
+    """The speculative scheduler under the same over-commit pressure:
+    parking (skip a round, keep the prefix) absorbs mild pressure,
+    preemption handles the rest, and emitted tokens stay bitwise equal to
+    plain greedy serving for shared-cache and distinct-cache drafters."""
+    cfg, params, _, _, _ = rig
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+               for _ in range(3)]
+    gens = [12, 12, 12]                      # equal: no early-retire relief
+    plain = srv.serve(params, cfg, prompts, slots=2, gen=12, gens=gens,
+                      cache_kind="paged", block_k=8, max_len=39)
+    for name, draft in (("self", "self"),
+                        ("prefix", srv.make_self_draft(params, cfg, 1))):
+        spec = srv.serve(params, cfg, prompts, slots=2, gen=12, gens=gens,
+                         cache_kind="paged", block_k=8, max_len=39,
+                         draft=draft, gamma=3, pool_blocks=7)
+        assert spec["finished"] == plain["finished"], name
+        assert spec["leaked_blocks"] == 0, name
+        # pool for ~1.4 sequences across 2 slots: pressure must escalate
+        # all the way to eviction, exercising resume re-emission
+        assert spec["preemptions"] > 0, name
+        assert spec["health"]["counters"]["spec_parks"] > 0, name
+
+
+def test_speculative_drafter_tables_stay_lockstep(rig):
+    """Satellite regression: preempting under a *distinct* drafter must
+    rewind target and drafter block tables together.  The scheduler
+    asserts slot-set lockstep internally on every release; here we also
+    check both pools drain to zero and the drafter pool saw real churn."""
+    cfg, params, _, _, _ = rig
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+               for _ in range(3)]
+    spec = srv.serve(params, cfg, prompts, slots=2, gen=12,
+                     gens=[12, 12, 12], cache_kind="paged", block_k=8,
+                     max_len=39, draft=srv.make_self_draft(params, cfg, 1),
+                     gamma=3, pool_blocks=7)
+    pools = spec["health"]["pools"]
+    assert pools["kv"]["live_at_end"] == 0
+    assert pools["draft_kv"]["live_at_end"] == 0
+    assert pools["draft_kv"]["high_water"] > 0
+    assert spec["preemptions"] > 0
+
+
+def test_sampled_overcommit_completes_leak_free(rig):
+    """Sampling under over-commit: no bitwise claim (the key stream
+    shifts across preemptions — documented), but scheduling invariants
+    still hold: every request completes at full length, nothing leaks."""
+    cfg, params, prompts, gens, _ = rig
+    stats = srv.serve(params, cfg, prompts, slots=4, gen=12, gens=gens,
+                      cache_kind="paged", block_k=8, max_len=40,
+                      pool_blocks=13, temperature=0.7, top_p=0.9)
+    assert len(stats["finished"]) == 8
+    assert all(len(stats["finished"][r]) == gens[r] for r in range(8))
+    assert stats["leaked_blocks"] == 0

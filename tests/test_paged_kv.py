@@ -9,7 +9,9 @@ Four layers of coverage, mirroring how the feature is built:
   * per-slot prefill writes *only* its own blocks, and the paged decode
     path bit-matches the dense-cache decode path on identical history;
   * the ``launch/serve.py`` scheduler admits via per-slot prefill only —
-    exactly one batch-wide prefill ever happens (the first wave).
+    no batch-wide prefill ever happens (demand-paged admission; the
+    over-commit / preemption / fault machinery has its own suites in
+    ``test_overcommit.py`` and ``test_faults.py``).
 """
 import jax
 import jax.numpy as jnp
@@ -256,8 +258,8 @@ def test_paged_decode_bit_matches_dense(rng):
 # --------------------------- scheduler: serve -------------------------------
 
 def test_serve_admission_is_per_slot_only(rng):
-    """requests > slots: exactly one batch-wide prefill (the first wave),
-    every admission a per-slot prefill, no leaked blocks at drain."""
+    """requests > slots: every admission is a per-slot prefill — the
+    demand-paged scheduler never batch-prefills — and no blocks leak."""
     from repro.launch import serve as srv
     cfg = _smoke_cfg()
     params = st.init_params_fn(cfg)(jax.random.PRNGKey(2))
@@ -265,8 +267,8 @@ def test_serve_admission_is_per_slot_only(rng):
                for _ in range(5)]
     stats = srv.serve(params, cfg, prompts, slots=2, gen=4,
                       cache_kind="paged", block_k=8)
-    assert stats["batch_prefills"] == 1
-    assert stats["slot_prefills"] == 3      # 5 requests - 2 first-wave slots
+    assert stats["batch_prefills"] == 0
+    assert stats["slot_prefills"] == 5      # one per request, none batched
     assert stats["leaked_blocks"] == 0
     assert sorted(stats["finished"]) == [0, 1, 2, 3, 4]
     assert all(len(v) == 4 for v in stats["finished"].values())
