@@ -15,7 +15,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test collect kernels dist bench-smoke bench-json perf-check chaos
+.PHONY: test collect kernels dist bench-smoke bench-json perf-check chaos \
+    serve-families
 
 # fail fast on import/collection errors across every test module
 collect:
@@ -55,6 +56,17 @@ perf-check:
 # run must terminate cleanly — every request finished/failed/expired (none
 # lost), preemption actually exercised, zero leaked blocks — with the
 # faults and straggler reports recorded in the metrics artifact.
+# every model family end-to-end through the one scheduler: the SSM engine
+# (int8 state slabs, fixed footprint) and the encdec engine (paged self-KV
+# + carved cross-KV, run under over-commit so preemption + bitwise resume
+# is exercised).  The dense engine is covered by chaos / the spec smoke.
+serve-families:
+	$(PY) -m repro.launch.serve --arch falcon_mamba_7b --smoke \
+	    --requests 6 --slots 3 --prompt-len 16 --gen 12
+	$(PY) -m repro.launch.serve --arch seamless_m4t_medium --smoke \
+	    --requests 6 --slots 3 --prompt-len 12 --gen 10 \
+	    --block-k 8 --pool-blocks 7
+
 CHAOS_JSON ?= /tmp/repro_chaos_health.json
 chaos:
 	REPRO_FAULT_EXHAUST=6:5 REPRO_FAULT_DELAY=14:0.3 REPRO_FAULT_NAN=20:1 \

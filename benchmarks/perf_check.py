@@ -13,7 +13,10 @@
     must actually preempt, must finish bitwise-equal to the uncommitted
     paged run, must leak zero blocks, and must keep its throughput cost
     relative to the uncommitted run within threshold of the committed
-    ratio.
+    ratio.  The ``ssm_churn`` / ``encdec_churn`` family cells gate the
+    same leak and bitwise preempt/resume contracts through the SSM and
+    encoder-decoder cache engines (additively — skipped when the
+    committed baseline predates them).
   * **roofline** — recompiles the decode / draft-loop / fused-verify
     launches and fails if one verify launch no longer moves fewer HBM
     bytes than the gamma decode launches it replaces (compile-only HLO
@@ -59,7 +62,12 @@ def _check_serve() -> bool:
          "draft_layers") if k in base["meta"]})
 
     failed = False
-    for kind in ("dense", "paged", "pressure", "spec_paged", "speculative"):
+    # encdec_pressure is deliberately absent: that run is unwarmed (its
+    # wall-clock includes compiles), so only its recovery contract is gated
+    for kind in ("dense", "paged", "pressure", "spec_paged", "speculative",
+                 "ssm_churn", "encdec_churn"):
+        if kind not in base or kind not in fresh:
+            continue        # additive: pre-family-engine baselines lack these
         b, f = base[kind]["tok_s"], fresh[kind]["tok_s"]
         ratio = f / max(b, 1e-9)
         status = "ok"
@@ -118,6 +126,34 @@ def _check_serve() -> bool:
         status, failed = "REGRESSION", True
     print(f"perf-check [serve.pressure] pressure/paged tok/s: baseline "
           f"{b_cost:.2f}x -> fresh {f_cost:.2f}x  {status}")
+    # family engines: the same recovery contract through the SSM and
+    # encdec cache paths (additive — skipped against older baselines)
+    if "ssm_churn" in base and "ssm_preempt_parity" in fresh:
+        if not fresh["ssm_preempt_parity"]:
+            print("perf-check [serve.ssm] forced-preempt run's tokens != "
+                  "unfaulted run (or never preempted)  REGRESSION")
+            failed = True
+        else:
+            print("perf-check [serve.ssm] forced preempt/resume bitwise "
+                  "parity  ok")
+        if fresh["ssm_churn"]["leaked_blocks"] != 0:
+            print(f"perf-check [serve.ssm] leaked_blocks = "
+                  f"{fresh['ssm_churn']['leaked_blocks']}  REGRESSION")
+            failed = True
+    if "encdec_pressure" in base and "encdec_pressure_parity" in fresh:
+        epr = fresh["encdec_pressure"]
+        if not fresh["encdec_pressure_parity"]:
+            print("perf-check [serve.encdec] over-committed run's tokens != "
+                  "uncommitted run (or never preempted)  REGRESSION")
+            failed = True
+        elif epr["leaked_blocks"] != 0:
+            print(f"perf-check [serve.encdec] leaked_blocks = "
+                  f"{epr['leaked_blocks']}  REGRESSION")
+            failed = True
+        else:
+            print(f"perf-check [serve.encdec] {epr['preemptions']} "
+                  f"preemptions, {epr['resumes']} resumes, bitwise parity, "
+                  f"0 leaks  ok")
     return failed
 
 

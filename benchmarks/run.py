@@ -6,7 +6,8 @@ for timing benches, the metric itself for model-based benches).
 ``--json`` emits the tracked perf artifacts on the 8-CPU-device grid
 (set up before jax imports):
 
-  * ``benchmarks/BENCH_serve.json``     — paged vs dense under churn plus
+  * ``benchmarks/BENCH_serve.json``     — paged vs dense under churn,
+    the SSM / encdec family cells through the same scheduler, plus
     speculative vs plain paged on the latency cell (tok/s, p50/p99
     decode-step latency, prefill counts, bytes moved, accept rate)
   * ``benchmarks/BENCH_attention.json`` — kernel microbenchmarks
@@ -53,7 +54,11 @@ def run_json(out_dir: pathlib.Path) -> None:
           f"({serve_json['spec_over_paged_tok_s']:.2f}x paged, "
           f"accept {spec['accept_rate']:.2f}, "
           f"{spec['tokens_per_verify']:.1f} tok/verify, "
-          f"parity={serve_json['bitwise_parity']})")
+          f"parity={serve_json['bitwise_parity']}); "
+          f"families ssm {serve_json['ssm_churn']['tok_s']:.1f} tok/s "
+          f"(preempt parity={serve_json['ssm_preempt_parity']}), "
+          f"encdec {serve_json['encdec_churn']['tok_s']:.1f} tok/s "
+          f"(pressure parity={serve_json['encdec_pressure_parity']})")
 
     roof_json = roofline_bench.run()
     (out_dir / "BENCH_roofline.json").write_text(

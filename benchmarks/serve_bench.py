@@ -1,6 +1,6 @@
 """Serving throughput: churn (dense vs paged), pressure, latency (speculative).
 
-Three committed cells, each measuring the regime its scheduler exists for:
+Committed cells, each measuring the regime its scheduler exists for:
 
 * **churn** — requests > slots with staggered generation lengths, so slots
   retire at different steps and the scheduler is constantly admitting.  The
@@ -14,6 +14,16 @@ Three committed cells, each measuring the regime its scheduler exists for:
   and re-asserts the recovery contract on every bench run: final tokens
   bitwise equal to the uncommitted paged run (``pressure_parity``), zero
   leaked blocks, preemptions actually observed.
+
+* **ssm_churn / encdec_churn** — the same churn workload through the other
+  two cache engines behind the family-agnostic scheduler: the SSM int8
+  state-slab engine (fixed footprint — note ``kv_bytes_per_step`` is flat
+  in sequence length) and the encoder-decoder engine (paged self-KV plus
+  the carved write-once cross-KV bank).  Each family also re-asserts the
+  bitwise preempt/resume contract on every bench run: the SSM cell via a
+  forced-preemption fault (its pool can never run dry naturally,
+  ``ssm_preempt_parity``), the encdec cell via genuine over-commit
+  pressure on its dynamic region (``encdec_pressure_parity``).
 
 * **latency** — small slot count, deeper target: the regime speculative
   decoding is for.  The target is an ``TARGET_LAYERS``-layer config whose
@@ -76,6 +86,31 @@ def _churn_setup(requests: int, prompt_len: int, gen: int, seed: int):
     prompts, gens = _prompts_gens(requests, prompt_len, gen, seed,
                                   cfg.vocab_size)
     return cfg, params, prompts, gens
+
+
+def _ssm_setup(requests: int, prompt_len: int, gen: int, seed: int):
+    from repro.configs import get_arch
+    from repro.launch import steps as st
+
+    cfg = get_arch("falcon_mamba_7b").smoke.replace(dtype="float32")
+    params = st.init_params_fn(cfg)(jax.random.PRNGKey(seed))
+    prompts, gens = _prompts_gens(requests, prompt_len, gen, seed,
+                                  cfg.vocab_size)
+    return cfg, params, prompts, gens
+
+
+def _encdec_setup(requests: int, prompt_len: int, gen: int, seed: int):
+    from repro.configs import get_arch
+    from repro.launch import steps as st
+
+    cfg = get_arch("seamless_m4t_medium").smoke.replace(dtype="float32")
+    params = st.init_params_fn(cfg)(jax.random.PRNGKey(seed))
+    prompts, gens = _prompts_gens(requests, prompt_len, gen, seed,
+                                  cfg.vocab_size)
+    rng = np.random.default_rng(seed + 1)
+    frames = [np.asarray(rng.normal(size=(prompt_len, cfg.d_model)),
+                         np.float32) * 0.02 for _ in range(requests)]
+    return cfg, params, prompts, frames, gens
 
 
 def _spec_setup(requests: int, prompt_len: int, gen: int, seed: int,
@@ -149,6 +184,38 @@ def run_grid(requests: int = 24, slots: int = 8, prompt_len: int = 250,
     # the recovery contract, re-checked on every bench run: preemption must
     # have happened, and must not have changed a single token
     out["pressure_parity"] = pstats["finished"] == paged_finished
+
+    # ---- family cells: the same scheduler through the SSM and encdec
+    # cache engines, each re-asserting bitwise preempt/resume ------------
+    from repro.launch.faults import FaultPlan
+    mcfg, mparams, mprompts, mgens = _ssm_setup(requests, prompt_len, gen,
+                                                seed)
+    mstats = srv.serve(mparams, mcfg, mprompts, slots=slots, gen=gen,
+                       gens=mgens, cache_kind="paged", warmup=True,
+                       repeats=REPEATS)
+    out["ssm_churn"] = {k: mstats[k] for k in KEEP if k in mstats}
+    # the SSM pool can never run dry (fixed per-slot slabs), so recovery is
+    # exercised with the forced-preemption fault instead of over-commit
+    mf = srv.serve(mparams, mcfg, mprompts, slots=slots, gen=gen,
+                   gens=mgens, cache_kind="paged",
+                   fault_plan=FaultPlan(preempt_step=5, preempt_slot=1))
+    out["ssm_preempt_parity"] = (mf["preemptions"] >= 1
+                                 and mf["finished"] == mstats["finished"])
+
+    ecfg, eparams, eprompts, eframes, egens = _encdec_setup(
+        requests, prompt_len, gen, seed)
+    estats = srv.serve(eparams, ecfg, eprompts, slots=slots, gen=gen,
+                       gens=egens, cache_kind="paged", block_k=block_k,
+                       frames=eframes, warmup=True, repeats=REPEATS)
+    out["encdec_churn"] = {k: estats[k] for k in KEEP if k in estats}
+    # over-commit the dynamic self-KV region (the carved cross bank is a
+    # fixed cost on top); completion requires preemption + bitwise resume
+    ep = srv.serve(eparams, ecfg, eprompts, slots=slots, gen=gen,
+                   gens=egens, cache_kind="paged", block_k=block_k,
+                   frames=eframes, pool_blocks=pool)
+    out["encdec_pressure"] = {k: ep[k] for k in PRESSURE_KEEP if k in ep}
+    out["encdec_pressure_parity"] = (ep["preemptions"] >= 1
+                                     and ep["finished"] == estats["finished"])
 
     scfg, sparams, drafter, sprompts, sgens = _spec_setup(
         spec_requests, prompt_len, gen, seed, target_layers, draft_layers)

@@ -81,6 +81,7 @@ class BlockAllocator:
         self._free = deque(i for i in range(num_blocks)
                            if i not in self._reserved)
         self._live: set = set()
+        self._carved: set = set()
         self.high_water = 0
 
     @property
@@ -90,6 +91,32 @@ class BlockAllocator:
     @property
     def live_count(self) -> int:
         return len(self._live)
+
+    @property
+    def carved_count(self) -> int:
+        return len(self._carved)
+
+    def carve(self, n: int) -> List[int]:
+        """Permanently remove ``n`` ids from the free list for a static
+        region (e.g. an encoder-decoder engine's write-once cross-KV bank).
+
+        Carved blocks are *not* live: they never return to the free list,
+        cannot be freed, and do not count as leaks — they model the paper's
+        weight-stationary bank, provisioned once per deployment rather than
+        allocated per request.  Carving is all-or-nothing like :meth:`alloc`.
+        """
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            raise BlockAllocationError(
+                f"carving {n} blocks, only {len(self._free)} free "
+                f"({len(self._live)} live of {self.num_blocks}, "
+                f"high water {self.high_water})",
+                requested=n, free=len(self._free), live=len(self._live),
+                high_water=self.high_water, num_blocks=self.num_blocks)
+        ids = [self._free.popleft() for _ in range(n)]
+        self._carved.update(ids)
+        return ids
 
     def alloc(self, n: int) -> List[int]:
         """Allocate ``n`` block ids; all-or-nothing."""
@@ -114,6 +141,11 @@ class BlockAllocator:
             if i in self._reserved:
                 raise BlockAllocationError(
                     f"freeing reserved block {i}",
+                    free=len(self._free), live=len(self._live),
+                    high_water=self.high_water, num_blocks=self.num_blocks)
+            if i in self._carved:
+                raise BlockAllocationError(
+                    f"freeing carved static block {i}",
                     free=len(self._free), live=len(self._live),
                     high_water=self.high_water, num_blocks=self.num_blocks)
             if i not in self._live:

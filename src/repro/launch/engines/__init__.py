@@ -1,0 +1,15 @@
+"""Family-specific cache engines behind one scheduler (see base.CacheEngine).
+
+The scheduler (`repro.launch.scheduler`) is family-blind: it admits, grows,
+preempts, resumes and retires requests purely through the
+:class:`~repro.launch.engines.base.CacheEngine` hooks.  Each engine owns the
+family's device cache layout, its jitted prefill/decode/release steps, and —
+when the family pages — the host-side block allocator.
+"""
+from repro.launch.engines.base import CacheEngine, PoolManager
+from repro.launch.engines.paged_kv import PagedKVEngine
+from repro.launch.engines.ssm import SSMStateEngine
+from repro.launch.engines.encdec import EncDecEngine
+
+__all__ = ["CacheEngine", "PoolManager", "PagedKVEngine", "SSMStateEngine",
+           "EncDecEngine"]

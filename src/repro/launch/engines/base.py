@@ -1,0 +1,151 @@
+"""CacheEngine protocol: the family-specific half of the serving scheduler.
+
+The continuous-batching control loop (admission, demand paging, preemption,
+deadlines, faults, health) is family-agnostic — what differs between a
+dense/MoE decoder, an SSM, and an encoder-decoder is *what a request's cache
+footprint is* and *how it is written*.  A :class:`CacheEngine` owns exactly
+that per-family state:
+
+  * the device cache pytree and the jitted prefill / decode / release /
+    grow steps over it (built once per engine, shared across repeats);
+  * the host-side block accounting (a :class:`PoolManager` over a
+    `paged_kv.BlockAllocator`) when the family pages, or nothing when the
+    per-slot footprint is fixed (SSM state slabs);
+  * the model inputs addressed by request id (prompt tokens, and for
+    encdec the encoder frames), so the scheduler never touches family
+    inputs directly.
+
+The scheduler contract (see `repro.launch.scheduler.run_schedule`):
+
+    cache = engine.start_run()          # fresh cache + allocator per run
+    need  = engine.admission_need(rid)  # blocks to admit rid (0 = no pool)
+    last1, cache = engine.admit(cache, slot, rid)   # per-slot prefill
+    n = engine.short(slot, upto)        # blocks missing to cover upto
+    start, ids = engine.grow_blocks(slot, n)        # host alloc (may raise)
+    cache = engine.grow_write(cache, slot, idx, blk)  # device table write
+    logits, cache = engine.decode(tokens, cache)    # one token per slot
+    cache = engine.release(cache, slot)  # free blocks + trash the slot
+    engine.finalize(health, inj)        # drain faults, record pool stats
+    engine.leaked()                     # live blocks after the run (== 0)
+
+Preemption needs no extra hook: the scheduler's snapshot is the generated
+token prefix (host-side), and resume is an ordinary :meth:`admit` — every
+engine's per-slot prefill is deterministic given the same executable and
+inputs, which is what makes preempt/resume bitwise for greedy (and, with
+per-request sampling keys, sampled) decoding.
+
+Engines with ``alloc is None`` (fixed per-slot footprint) never see
+``grow_blocks``/``grow_write`` and are exempt from pool squeezes and
+admission stalls — exactly the old scheduler's ``paged`` flag, made a
+property of the engine instead of the family name.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core import paged_kv
+
+
+class PoolManager:
+    """Host half of demand paging for one paged cache.
+
+    Owns the slot -> block-id lists over a :class:`paged_kv.BlockAllocator`;
+    the device half (table rows) is written by the scheduler's jitted
+    ``grow`` / ``rollback`` / ``release`` steps.  All methods are plain
+    host bookkeeping — allocation failures surface as
+    :class:`paged_kv.BlockAllocationError` for the pressure path to catch.
+    """
+
+    def __init__(self, alloc: paged_kv.BlockAllocator, table_width: int,
+                 block_k: int):
+        self.alloc = alloc
+        self.mb = table_width
+        self.bk = block_k
+        self.owned: Dict[int, List[int]] = {}
+
+    def admit_row(self, slot: int, cover_len: int) -> np.ndarray:
+        """Allocate coverage for ``cover_len`` positions; full-width table
+        row (trash-padded) for the per-slot prefill."""
+        ids = self.alloc.alloc(paged_kv.blocks_per_seq(cover_len, self.bk))
+        self.owned[slot] = ids
+        row = np.full((self.mb,), paged_kv.TRASH_BLOCK, np.int32)
+        row[:len(ids)] = ids
+        return row
+
+    def short(self, slot: int, cover_len: int) -> int:
+        """Blocks missing before the slot covers ``cover_len`` positions."""
+        return (paged_kv.blocks_per_seq(cover_len, self.bk)
+                - len(self.owned[slot]))
+
+    def grow(self, slot: int, n: int):
+        """Extend a slot by ``n`` blocks; (first_table_index, new_ids)."""
+        ids = self.alloc.alloc(n)
+        start = len(self.owned[slot])
+        self.owned[slot].extend(ids)
+        return start, ids
+
+    def release(self, slot: int) -> None:
+        self.alloc.free(self.owned.pop(slot))
+
+    def reclaim_tail(self, slot: int, keep_len: int) -> int:
+        """Free blocks wholly past ``keep_len`` (speculative over-coverage);
+        returns how many went back to the free list."""
+        tail = paged_kv.tail_blocks(self.owned[slot], keep_len, self.bk)
+        if tail:
+            keep = paged_kv.blocks_per_seq(keep_len, self.bk)
+            self.owned[slot] = self.owned[slot][:keep]
+            self.alloc.free(tail)
+        return len(tail)
+
+
+class CacheEngine:
+    """Base class / protocol for family cache engines (docs in the module
+    docstring).  Subclasses must set ``family``, ``slots``, ``cfg`` and
+    implement every hook; ``alloc``/``pager`` stay None for engines with a
+    fixed per-slot footprint."""
+
+    family: str = ""
+    pool_tag: str = "kv"
+    alloc: Optional[paged_kv.BlockAllocator] = None
+    pager: Optional[PoolManager] = None
+
+    def start_run(self):
+        raise NotImplementedError
+
+    def warmup(self):
+        """Compile every jitted step on throwaway inputs; returns
+        ``(admit_logits, decode_logits)`` for the scheduler to warm its
+        sampler on.  Optional — the default skips engine warmup."""
+        return None
+
+    def admission_need(self, rid: int) -> int:
+        return 0
+
+    def admit(self, cache, slot: int, rid: int):
+        raise NotImplementedError
+
+    def short(self, slot: int, upto: int) -> int:
+        return 0
+
+    def grow_blocks(self, slot: int, n: int):
+        raise NotImplementedError
+
+    def grow_write(self, cache, slot: int, idx: int, block: int):
+        raise NotImplementedError
+
+    def decode(self, tokens, cache):
+        raise NotImplementedError
+
+    def release(self, cache, slot: int):
+        raise NotImplementedError
+
+    def finalize(self, health, inj) -> None:
+        pass
+
+    def leaked(self) -> int:
+        return 0
+
+    def kv_bytes_per_step(self, gens) -> int:
+        return 0

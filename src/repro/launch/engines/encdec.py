@@ -1,0 +1,199 @@
+"""Encoder-decoder cache engine: paged self-KV + carved write-once cross-KV.
+
+The decoder's self-attention K/V pages dynamically exactly like the
+dense/MoE engine.  The encoder's cross K/V is the paper's weight-stationary
+bank: computed once per admission from the request's encoder frames,
+quantized into a **carved static region of the same block pool**
+(`paged_kv.BlockAllocator.carve` — ids permanently outside the free list,
+``cross_bps`` blocks per slot), and read-only for the request's lifetime.
+Carving rather than a separate buffer keeps one pool/one kernel layout:
+both attention kinds gather int8 tiles through a block table via
+`core.attention.paged_decode_attention`.
+
+Preemption: releasing a slot frees only its dynamic self-KV blocks; the
+carved region is simply overwritten by the next admission.  Because the
+carve is FIFO-deterministic, every run addresses the same cross blocks, and
+re-admission re-encodes the same frames into them — so preempt/resume stays
+bitwise, same argument as the decoder-only path.
+
+All requests must share one encoder length (one prefill executable); the
+engine asserts that at construction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import paged_kv
+from repro.launch import steps as st
+from repro.launch.engines import base
+from repro.models import encdec as E
+
+
+class EncDecEngine(base.CacheEngine):
+    pool_tag = "kv"
+    family = "encdec"
+
+    def __init__(self, params, cfg, prompts: List[np.ndarray], *,
+                 frames: List[np.ndarray], slots: int, max_len: int,
+                 block_k: int = 32, pool_blocks: Optional[int] = None,
+                 cover_extra: int = 1):
+        assert cfg.family == "encdec", cfg.family
+        assert len(frames) == len(prompts), (len(frames), len(prompts))
+        enc_len = frames[0].shape[0]
+        assert all(f.shape[0] == enc_len for f in frames), \
+            "one encoder length per run (one prefill executable)"
+        self.params = params
+        self.cfg = cfg
+        self.prompts = prompts
+        self.frames = frames
+        self.enc_len = enc_len
+        self.slots = slots
+        self.max_len = max_len
+        self.block_k = block_k
+        self.cover_extra = cover_extra
+        self.bps = paged_kv.blocks_per_seq(max_len, block_k)
+        self.cross_bps = paged_kv.blocks_per_seq(enc_len, block_k)
+        if pool_blocks is not None and pool_blocks < 1 + self.bps:
+            raise ValueError(
+                f"pool_blocks={pool_blocks} cannot hold one sequence: need "
+                f">= 1 + {self.bps} (trash + blocks_per_seq("
+                f"max_len={max_len}))")
+        # --pool-blocks over-commits the *dynamic* self-KV region; the
+        # carved cross bank is a fixed deployment cost on top
+        dyn = (pool_blocks if pool_blocks is not None
+               else 1 + slots * self.bps)
+        self.pool_size = dyn + slots * self.cross_bps
+        self.alloc: Optional[paged_kv.BlockAllocator] = None
+        self.pager: Optional[base.PoolManager] = None
+        self.calib_rid: Optional[int] = None
+        self.cross_table: Optional[np.ndarray] = None
+
+        self.calib_prefill = jax.jit(
+            st.make_paged_prefill_step(cfg, calibrate=True),
+            donate_argnums=(3,))
+        self.slot_prefill = jax.jit(
+            st.make_paged_prefill_step(cfg, calibrate=False),
+            donate_argnums=(3,))
+        self.decode_step = jax.jit(st.make_decode_step(cfg),
+                                   donate_argnums=(2,))
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def release_step(cache, slot):
+            # dynamic self-KV row only; the carved cross region has no
+            # table row to trash and is rewritten by the next admission
+            cache = dict(cache, length=cache["length"].at[slot].set(0))
+            cache["kv"] = paged_kv.release_slot(cache["kv"], slot)
+            return cache
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def grow_step(cache, slot, idx, block):
+            kv = cache["kv"]
+            return dict(cache, kv=dict(
+                kv, block_table=kv["block_table"].at[slot, idx].set(block)))
+
+        self.release_step = release_step
+        self.grow_step = grow_step
+
+    # ---- scheduler hooks ------------------------------------------------
+
+    def _carve(self):
+        """Fresh allocator with the cross bank carved out.  The free list
+        is FIFO, so the carved ids are the same every run — the static
+        region's addresses are part of the deployment, not the schedule."""
+        alloc = paged_kv.BlockAllocator(self.pool_size)
+        ids = alloc.carve(self.slots * self.cross_bps)
+        table = np.asarray(ids, np.int32).reshape(self.slots,
+                                                  self.cross_bps)
+        return alloc, table
+
+    def make_cache(self, cross_table):
+        return E.make_paged_cache(self.cfg, self.slots, self.max_len,
+                                  block_k=self.block_k,
+                                  num_blocks=self.pool_size,
+                                  cross_table=cross_table,
+                                  enc_len=self.enc_len)
+
+    def start_run(self):
+        self.alloc, self.cross_table = self._carve()
+        self.pager = base.PoolManager(self.alloc, self.bps, self.block_k)
+        self.calib_rid = None
+        return self.make_cache(self.cross_table)
+
+    def warmup(self):
+        alloc, table = self._carve()
+        w_cache = self.make_cache(table)
+        first = alloc.alloc(2)          # scratch dynamic ids, same layout
+        w_row = np.full((self.bps,), paged_kv.TRASH_BLOCK, np.int32)
+        w_row[:1] = first[0]
+        w_prompt = jnp.asarray(self.prompts[0])[None]
+        w_frames = jnp.asarray(self.frames[0])[None]
+        w_sid = jnp.asarray([0], jnp.int32)
+        w_rowj = jnp.asarray(w_row[None], jnp.int32)
+        _, w_cache = self.calib_prefill(self.params, w_frames, w_prompt,
+                                        w_cache, w_sid, w_rowj)
+        w_l1, w_cache = self.slot_prefill(self.params, w_frames, w_prompt,
+                                          w_cache, w_sid, w_rowj)
+        w_cache = self.grow_step(w_cache, jnp.int32(0), jnp.int32(1),
+                                 jnp.int32(first[1]))
+        w_tok = jnp.zeros((self.slots,), jnp.int32)
+        w_out, w_cache = self.decode_step(self.params, w_tok, w_cache)
+        w_cache = self.release_step(w_cache, jnp.int32(0))
+        jax.block_until_ready(w_out)
+        return w_l1, w_out
+
+    def admission_need(self, rid: int) -> int:
+        return paged_kv.blocks_per_seq(
+            len(self.prompts[rid]) + self.cover_extra, self.block_k)
+
+    def admit(self, cache, slot: int, rid: int):
+        row = self.pager.admit_row(
+            slot, len(self.prompts[rid]) + self.cover_extra)
+        if self.calib_rid is None:
+            self.calib_rid = rid
+        fn = self.calib_prefill if rid == self.calib_rid else \
+            self.slot_prefill
+        return fn(self.params, jnp.asarray(self.frames[rid])[None],
+                  jnp.asarray(self.prompts[rid])[None], cache,
+                  jnp.asarray([slot], jnp.int32),
+                  jnp.asarray(row[None], jnp.int32))
+
+    def short(self, slot: int, upto: int) -> int:
+        return self.pager.short(slot, upto)
+
+    def grow_blocks(self, slot: int, n: int):
+        return self.pager.grow(slot, n)
+
+    def grow_write(self, cache, slot: int, idx: int, block: int):
+        return self.grow_step(cache, jnp.int32(slot), jnp.int32(idx),
+                              jnp.int32(block))
+
+    def decode(self, tokens, cache):
+        return self.decode_step(self.params, tokens, cache)
+
+    def release(self, cache, slot: int):
+        self.pager.release(slot)
+        return self.release_step(cache, jnp.int32(slot))
+
+    def finalize(self, health, inj) -> None:
+        inj.drain(self.alloc)
+        health.pool(self.pool_tag, self.alloc)
+
+    def leaked(self) -> int:
+        return self.alloc.live_count
+
+    def kv_bytes_per_step(self, gens) -> int:
+        # self-KV mean occupancy + the full static cross bank, both read
+        # every decode step
+        nl = self.cfg.n_layers
+        prompt_len = len(self.prompts[0])
+        mean_gen = sum(gens) // (2 * len(gens))
+        mean_blocks = paged_kv.blocks_per_seq(prompt_len + mean_gen,
+                                              self.block_k)
+        return (2 * nl * self.slots * self.cfg.n_kv_heads
+                * (mean_blocks + self.cross_bps) * self.block_k
+                * self.cfg.hd)

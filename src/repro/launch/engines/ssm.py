@@ -1,0 +1,155 @@
+"""SSM cache engine: fixed-size per-slot int8 state slabs.
+
+An SSM decode footprint is O(1) per sequence — a conv tail ``(d_conv-1,
+conv_c)`` and the recurrent state ``h`` — so there is no block growth, no
+demand paging, and over-commit is structurally impossible (``alloc`` stays
+None; the scheduler's pool machinery is inert).  What the engine adds over
+the old float path is **int8 state residency**: between steps both slabs
+live quantized in the pool (the paper's CIM array holds activations int8),
+with per-(layer, slot) dynamic scales through `core.quantization`:
+
+    ssm_q = {conv_q int8 (L, S, d_conv-1, C),  conv_s f32 (L, S, 1, 1),
+             h_q    int8 (L, S, ...),          h_s    f32 (L, S, 1...)}
+
+Each decode step dequantizes the slabs, runs the float recurrence
+(`models.transformer.decode_step` -> `models.ssm`), and requantizes.
+
+Two properties make this scheduler-safe:
+
+  * **round-trip idempotency** — ``absmax_scale`` puts the max magnitude
+    at exactly 127, so requantizing a freshly dequantized slab reproduces
+    the same scale and the same int8 values: a slot whose request retired
+    (but keeps stepping — static batch shape) or sat idle does not drift;
+  * **row independence** — scales are per-(layer, slot) and the recurrence
+    is per-row, so a request's trajectory is independent of slot index and
+    co-residents; preempt/resume replays to a bitwise-identical
+    continuation exactly like the paged KV engine.
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantization as qlib
+from repro.launch.engines import base
+from repro.models import ssm as S
+from repro.models import transformer as T
+
+
+def _quant_state(states):
+    """{"conv", "h"} float (L, S, ...) -> int8 slabs + per-(L, S) scales."""
+    out = {}
+    for name in ("conv", "h"):
+        x = states[name]
+        axes = tuple(range(2, x.ndim))
+        s = qlib.absmax_scale(x, axis=axes)
+        out[name + "_q"] = qlib.quantize(x, s)
+        out[name + "_s"] = s
+    return out
+
+
+def _dequant_state(sq, cfg):
+    return {
+        "conv": qlib.dequantize(sq["conv_q"], sq["conv_s"]).astype(
+            cfg.compute_dtype),
+        "h": qlib.dequantize(sq["h_q"], sq["h_s"]),    # recurrence in f32
+    }
+
+
+class SSMStateEngine(base.CacheEngine):
+    pool_tag = "ssm"
+    family = "ssm"
+
+    def __init__(self, params, cfg, prompts: List[np.ndarray], *,
+                 slots: int, max_len: int, block_k: int = 32,
+                 pool_blocks: Optional[int] = None):
+        assert cfg.family == "ssm", cfg.family
+        if pool_blocks is not None:
+            raise ValueError("--pool-blocks needs the paged KV cache "
+                             f"(family {cfg.family} has none)")
+        del max_len, block_k                 # fixed footprint: no paging
+        self.params = params
+        self.cfg = cfg
+        self.prompts = prompts
+        self.slots = slots
+        shapes = jax.eval_shape(
+            lambda: S.init_ssm_state(cfg, slots, cfg.n_layers))
+        self._state_bytes = sum(int(np.prod(l.shape))  # int8-resident
+                                for l in jax.tree.leaves(shapes))
+
+        def prefill_fn(params, tokens, cache, slot_ids):
+            b, s = tokens.shape
+            logits, aux = T.forward(params, tokens, cfg, serve=True)
+            q = _quant_state(aux["ssm"])
+            sq = {k: cache["ssm_q"][k].at[:, slot_ids].set(v)
+                  for k, v in q.items()}
+            valid = jnp.full((b,), s, jnp.int32)
+            idx = jnp.maximum(valid - 1, 0)
+            last = jnp.take_along_axis(logits, idx[:, None, None],
+                                       axis=1)[:, 0]
+            return last, dict(cache, ssm_q=sq,
+                              length=cache["length"].at[slot_ids].set(valid))
+
+        def decode_fn(params, token, cache):
+            fstate = {"ssm": _dequant_state(cache["ssm_q"], cfg),
+                      "length": cache["length"]}
+            logits, fstate = T.decode_step(params, token, cfg, fstate)
+            return logits, dict(cache, ssm_q=_quant_state(fstate["ssm"]),
+                                length=fstate["length"])
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def release_step(cache, slot):
+            sq = {k: v.at[:, slot].set(jnp.zeros((), v.dtype))
+                  for k, v in cache["ssm_q"].items()}
+            return dict(cache, ssm_q=sq,
+                        length=cache["length"].at[slot].set(0))
+
+        self.prefill_step = jax.jit(prefill_fn, donate_argnums=(2,))
+        self.decode_step = jax.jit(decode_fn, donate_argnums=(2,))
+        self.release_step = release_step
+
+    # ---- scheduler hooks ------------------------------------------------
+
+    def make_cache(self):
+        st = S.init_ssm_state(self.cfg, self.slots, self.cfg.n_layers)
+        sq = {}
+        for name in ("conv", "h"):
+            x = st[name]
+            sq[name + "_q"] = jnp.zeros(x.shape, jnp.int8)
+            sq[name + "_s"] = jnp.full(x.shape[:2] + (1,) * (x.ndim - 2),
+                                       1e-2, jnp.float32)
+        return {"ssm_q": sq, "length": jnp.zeros((self.slots,), jnp.int32)}
+
+    def start_run(self):
+        return self.make_cache()
+
+    def warmup(self):
+        w_cache = self.make_cache()
+        w_l1, w_cache = self.prefill_step(
+            self.params, jnp.asarray(self.prompts[0])[None], w_cache,
+            jnp.asarray([0], jnp.int32))
+        w_tok = jnp.zeros((self.slots,), jnp.int32)
+        w_out, w_cache = self.decode_step(self.params, w_tok, w_cache)
+        w_cache = self.release_step(w_cache, jnp.int32(0))
+        jax.block_until_ready(w_out)
+        return w_l1, w_out
+
+    def admit(self, cache, slot: int, rid: int):
+        return self.prefill_step(
+            self.params, jnp.asarray(self.prompts[rid])[None], cache,
+            jnp.asarray([slot], jnp.int32))
+
+    def decode(self, tokens, cache):
+        return self.decode_step(self.params, tokens, cache)
+
+    def release(self, cache, slot: int):
+        return self.release_step(cache, jnp.int32(slot))
+
+    def kv_bytes_per_step(self, gens) -> int:
+        # the whole int8 state is read and rewritten every step,
+        # independent of sequence length — the SSM serving win
+        return self._state_bytes

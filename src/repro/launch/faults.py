@@ -14,7 +14,13 @@ recovery can be asserted bitwise.  Three faults:
 * **NaN/Inf activation corruption** — at step N the decode logits of one
   slot are overwritten with NaN before token selection; the scheduler's
   finite-guard must detect it and retire the slot (fail the request)
-  instead of emitting garbage tokens or hanging.
+  instead of emitting garbage tokens or hanging;
+* **forced preemption** — at step N one named slot is preempted exactly as
+  if the pool had run dry, regardless of actual pressure.  This is how the
+  bitwise preempt/resume contract is exercised on cache engines whose pool
+  never naturally exhausts (the SSM slab engine, an encdec self-KV pool
+  sized generously): the scheduler must snapshot, re-queue, re-admit and
+  replay the request to an identical continuation.
 
 Faults are configured programmatically (:class:`FaultPlan`) or from the
 environment (``FaultPlan.from_env``), so `make chaos` can drive the CLI:
@@ -25,6 +31,8 @@ environment (``FaultPlan.from_env``), so `make chaos` can drive the CLI:
     REPRO_FAULT_DELAY=<step>:<seconds>      sleep <seconds> before <step>
     REPRO_FAULT_NAN=<step>[:<slot>]         NaN the logits of <slot>
                                             (default 0) at <step>
+    REPRO_FAULT_PREEMPT=<step>[:<slot>]     force-preempt <slot> (default 0)
+                                            at <step>
     REPRO_FAULT_SEED=<int>                  seed for any randomized choice
                                             (reserved; recorded in events)
 
@@ -54,6 +62,8 @@ class FaultPlan:
     delay_seconds: float = 0.0
     nan_step: Optional[int] = None
     nan_slot: int = 0
+    preempt_step: Optional[int] = None
+    preempt_slot: int = 0
     seed: int = 0
 
     @classmethod
@@ -75,15 +85,23 @@ class FaultPlan:
             nan_step = int(parts[0])
             if len(parts) > 1:
                 nan_slot = int(parts[1])
+        preempt_step, preempt_slot = None, 0
+        if env.get("REPRO_FAULT_PREEMPT"):
+            parts = env["REPRO_FAULT_PREEMPT"].split(":")
+            preempt_step = int(parts[0])
+            if len(parts) > 1:
+                preempt_slot = int(parts[1])
         return cls(exhaust_step=exhaust_step, exhaust_hold=exhaust_hold,
                    delay_step=delay_step, delay_seconds=delay_seconds,
                    nan_step=nan_step, nan_slot=nan_slot,
+                   preempt_step=preempt_step, preempt_slot=preempt_slot,
                    seed=int(env.get("REPRO_FAULT_SEED", "0")))
 
     @property
     def armed(self) -> bool:
         return (self.exhaust_step is not None or self.delay_step is not None
-                or self.nan_step is not None)
+                or self.nan_step is not None
+                or self.preempt_step is not None)
 
 
 class FaultInjector:
@@ -131,6 +149,16 @@ class FaultInjector:
             self._steal_step = step
             self._record("exhaust", step, stolen=len(self._stolen),
                          hold=p.exhaust_hold)
+
+    def force_preempt(self, step: int) -> Optional[int]:
+        """Slot to preempt at this step regardless of pool pressure, or
+        None.  The scheduler checks the slot is actually active; recording
+        happens here so even a no-op firing (idle slot) is visible."""
+        p = self.plan
+        if p.preempt_step is not None and step == p.preempt_step:
+            self._record("forced_preempt", step, slot=p.preempt_slot)
+            return p.preempt_slot
+        return None
 
     def corrupt_logits(self, step: int, logits):
         """NaN one slot's logits row at the armed step (decode-activation

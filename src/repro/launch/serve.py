@@ -1,41 +1,52 @@
-"""Paged continuous-batching serving driver over the int8 KV block pool.
+"""Family-agnostic continuous-batching serving driver over the CIM cache
+engines.
 
-The paper's decoder mapping end-to-end, at serving granularity: K/V live
-int8 in a block pool (`repro.core.paged_kv`) exactly as they live in the CIM
-array, each slot owns a block-table row, and batched decode steps stream one
-token per sequence per step through the split-softmax datapath — gathering
-K/V tiles *through the table* in the Pallas decode kernel.
+The paper's decoder mapping end-to-end, at serving granularity: the model's
+recurrent state lives int8 in a device pool exactly as it lives in the CIM
+array, and batched decode steps stream one token per sequence per step
+through the split-softmax datapath.  One scheduler
+(`repro.launch.scheduler.run_schedule`) drives every model family through a
+family-specific `repro.launch.engines` cache engine:
 
-The scheduler does real continuous batching with **demand-paged allocation**:
+  * **dense / MoE** (`PagedKVEngine`) — the int8 paged KV block pool
+    (`repro.core.paged_kv`): every admission is a per-slot prefill that
+    allocates only the blocks the prompt needs, a slot *grows* one block at
+    a time as it crosses block boundaries, and retirement returns blocks to
+    the free list.  The very first admission also calibrates the pool's
+    static per-layer scales.
+  * **SSM** (`SSMStateEngine`) — fixed-size per-slot slabs (conv tail +
+    recurrent state) held int8 between steps with per-(layer, slot) scales;
+    no paging, no over-commit (the footprint is O(1) per sequence — the
+    SSM serving win).
+  * **encoder-decoder** (`EncDecEngine`) — paged int8 self-KV plus a
+    write-once quantized cross-KV bank carved out of the *same* block pool
+    (`BlockAllocator.carve`): computed at admission from the request's
+    encoder frames, read-only for the request's lifetime.
 
-  * every admission is a per-slot prefill (`steps.make_paged_prefill_step`)
-    that allocates only the blocks the prompt needs and writes only the new
-    slot's pages — the rest of the batch keeps decoding undisturbed; the
-    very first admission also calibrates the pool's static per-layer scales;
-  * a slot *grows* one block at a time as its sequence crosses block
-    boundaries, so pool occupancy tracks live tokens, not reservations;
-  * a finished sequence retires by returning its blocks to the free-list
-    allocator and pointing its table row at the trash block.
-
-Because blocks are allocated on demand, the pool can be sized **below**
-``slots * blocks_per_seq`` (``--pool-blocks``) to over-commit memory.  When
-a growth or admission then exhausts the pool, the scheduler **preempts** a
-victim (``--preempt-policy newest`` | ``longest``): the victim's blocks are
-freed, its table row is trashed, and the request is re-queued with its
-generated prefix.  On re-admission the prompt is re-prefilled (same per-slot
-executable as the original admission) and the recorded prefix is replayed
-through the ordinary decode path, so for greedy decoding the final outputs
-are **bitwise identical** to a run that was never preempted — per-row
-decode numerics do not depend on slot index or co-resident sequences, which
-``tests/test_overcommit.py`` pins.  (With ``--temperature > 0`` the replay
-still feeds the recorded prefix, but the shared sampling-key stream shifts,
-so cross-run parity is a greedy-only contract.)
+Because dense/MoE/encdec blocks are allocated on demand, the pool can be
+sized **below** ``slots * blocks_per_seq`` (``--pool-blocks``) to
+over-commit memory.  When a growth or admission then exhausts the pool, the
+scheduler **preempts** a victim (``--preempt-policy newest`` | ``longest``):
+the victim's blocks are freed, its table row is trashed, and the request is
+re-queued with its generated prefix.  On re-admission the prompt is
+re-prefilled (same per-slot executable as the original admission) and the
+recorded prefix is replayed through the ordinary decode path, so the final
+outputs are **bitwise identical** to a run that was never preempted —
+per-row decode numerics do not depend on slot index or co-resident
+sequences, which ``tests/test_overcommit.py`` and ``tests/test_engines.py``
+pin.  This holds for sampling too: sampling keys are derived per request
+from ``(seed, request id, tokens drawn)`` (`scheduler.RequestKeys`), not
+from a shared key stream, so a resumed request continues with exactly the
+keys the uninterrupted run would have used.
 
 Operational hardening on the same loop:
 
   * ``--deadline-steps N`` cancels any request still unfinished N scheduler
     steps after its first admission (preemption/queue time counts — that is
     what a deadline is for) and reports it under ``stats["expired"]``;
+  * ``--deadline-ms MS`` is the wall-clock variant, and additionally turns
+    admission into earliest-deadline-first: the queued request with the
+    least remaining budget is admitted ahead of FIFO order;
   * a finite-guard folded into the token selector retires a slot whose
     logits go NaN/Inf (``stats["failed"]``) instead of emitting garbage;
   * every step is timed through a `repro.dist.straggler.StragglerWatchdog`
@@ -47,27 +58,32 @@ Chaos knobs (see `repro.launch.faults`; all deterministic, step-addressed):
 
     --pool-blocks N             over-commit the pool (min 1 + blocks/seq)
     --deadline-steps N          per-request scheduler-step deadline
+    --deadline-ms MS            per-request wall-clock deadline (EDF admit)
     REPRO_FAULT_EXHAUST=S[:H]   steal all free blocks at step S, hold H steps
     REPRO_FAULT_DELAY=S:SEC     sleep SEC before step S (trips the watchdog)
     REPRO_FAULT_NAN=S[:SLOT]    NaN one slot's logits at step S
+    REPRO_FAULT_PREEMPT=S[:SLOT] force-preempt one slot at step S
     REPRO_FAULT_SEED=N          recorded into the fault events
 
 ``--cache dense`` keeps the pre-paged scheduler (admission = re-prefill the
 whole batch) as the measured baseline; ``benchmarks/run.py --json`` records
-both plus an over-committed churn cell so the paged speedup and the cost of
-preemption under pressure are tracked artifacts (``BENCH_serve.json``).
+both plus over-committed churn cells for all three families so the paged
+speedup and the cost of preemption under pressure are tracked artifacts
+(``BENCH_serve.json``).
 
     PYTHONPATH=src python -m repro.launch.serve --arch tinyllama_1p1b \
         --smoke --requests 8 --slots 4 --prompt-len 32 --gen 24 \
         --pool-blocks 12 --deadline-steps 200 --metrics-json health.json
+    PYTHONPATH=src python -m repro.launch.serve --arch falcon_mamba_7b \
+        --smoke --requests 6 --slots 3 --prompt-len 16 --gen 12
+    PYTHONPATH=src python -m repro.launch.serve --arch seamless_m4t_medium \
+        --smoke --requests 6 --slots 3 --prompt-len 12 --gen 10
 """
 from __future__ import annotations
 
 import argparse
-import functools
 import json
 import time
-from collections import deque
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -75,143 +91,44 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
-from repro.core import paged_kv
-from repro.dist import straggler as strag
 from repro.launch import faults as faults_mod
+from repro.launch import scheduler as sched
 from repro.launch import steps as st
-from repro.launch.health import ServeHealth
+from repro.launch.engines import (EncDecEngine, PagedKVEngine, PoolManager,
+                                  SSMStateEngine)
 from repro.models import transformer as T
 
-
-def _percentile(xs: List[float], p: float) -> float:
-    return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
-
-
-def make_sampler(temperature: float, top_p: float, vocab_size: int):
-    """Jitted token selector: logits (B, V_padded) + key -> (tokens (B,),
-    finite (B,)).
-
-    ``temperature == 0`` is greedy argmax — the default, the only mode the
-    speculative path supports (its acceptance rule compares against the
-    target argmax), and bit-identical to the pre-sampling scheduler.
-    Otherwise: temperature-scaled nucleus sampling; padding lanes are masked
-    before the softmax so they can never be drawn.
-
-    The second output is the NaN/Inf guard, computed on the *raw* logits in
-    the same launch: a row that is not entirely finite produced a garbage
-    token, and the scheduler retires that slot instead of serving it.
-    """
-    if temperature == 0.0:
-        @jax.jit
-        def greedy(logits, key):
-            del key
-            ok = jnp.isfinite(logits).all(axis=-1)
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32), ok
-        return greedy
-
-    @jax.jit
-    def sample(logits, key):
-        ok = jnp.isfinite(logits).all(axis=-1)
-        lg = logits.astype(jnp.float32) / temperature
-        lane = jnp.arange(lg.shape[-1])
-        lg = jnp.where(lane >= vocab_size, -jnp.inf, lg)
-        if top_p < 1.0:
-            srt = jnp.sort(lg, axis=-1)[:, ::-1]
-            csum = jnp.cumsum(jax.nn.softmax(srt, axis=-1), axis=-1)
-            # smallest prefix with mass >= top_p; the top token always stays
-            keep = csum - jax.nn.softmax(srt, axis=-1) < top_p
-            cutoff = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1,
-                             keepdims=True)
-            lg = jnp.where(lg < cutoff, -jnp.inf, lg)
-        return jax.random.categorical(key, lg).astype(jnp.int32), ok
-
-    return sample
+# long-standing import sites (tests, benches, examples) keep working; the
+# implementations live in scheduler.py / engines/ now
+make_sampler = sched.make_sampler
+make_sampler  # re-exported
+_percentile = sched.percentile
+_PoolManager = PoolManager
+_pick_victim = sched.pick_victim
+_finalize_stats = sched.finalize_stats
 
 
-class _PoolManager:
-    """Host half of demand paging for one paged cache.
-
-    Owns the slot -> block-id lists over a :class:`paged_kv.BlockAllocator`;
-    the device half (table rows) is written by the scheduler's jitted
-    ``grow`` / ``rollback`` / ``release`` steps.  All methods are plain
-    host bookkeeping — allocation failures surface as
-    :class:`paged_kv.BlockAllocationError` for the pressure path to catch.
-    """
-
-    def __init__(self, alloc: paged_kv.BlockAllocator, table_width: int,
-                 block_k: int):
-        self.alloc = alloc
-        self.mb = table_width
-        self.bk = block_k
-        self.owned: Dict[int, List[int]] = {}
-
-    def admit_row(self, slot: int, cover_len: int) -> np.ndarray:
-        """Allocate coverage for ``cover_len`` positions; full-width table
-        row (trash-padded) for the per-slot prefill."""
-        ids = self.alloc.alloc(paged_kv.blocks_per_seq(cover_len, self.bk))
-        self.owned[slot] = ids
-        row = np.full((self.mb,), paged_kv.TRASH_BLOCK, np.int32)
-        row[:len(ids)] = ids
-        return row
-
-    def short(self, slot: int, cover_len: int) -> int:
-        """Blocks missing before the slot covers ``cover_len`` positions."""
-        return (paged_kv.blocks_per_seq(cover_len, self.bk)
-                - len(self.owned[slot]))
-
-    def grow(self, slot: int, n: int):
-        """Extend a slot by ``n`` blocks; (first_table_index, new_ids)."""
-        ids = self.alloc.alloc(n)
-        start = len(self.owned[slot])
-        self.owned[slot].extend(ids)
-        return start, ids
-
-    def release(self, slot: int) -> None:
-        self.alloc.free(self.owned.pop(slot))
-
-    def reclaim_tail(self, slot: int, keep_len: int) -> int:
-        """Free blocks wholly past ``keep_len`` (speculative over-coverage);
-        returns how many went back to the free list."""
-        tail = paged_kv.tail_blocks(self.owned[slot], keep_len, self.bk)
-        if tail:
-            keep = paged_kv.blocks_per_seq(keep_len, self.bk)
-            self.owned[slot] = self.owned[slot][:keep]
-            self.alloc.free(tail)
-        return len(tail)
-
-
-def _pick_victim(active: Dict[int, int], exclude: int, policy: str,
-                 admit_seq: Dict[int, int], remaining) -> Optional[int]:
-    """Choose a slot to preempt under pool pressure.
-
-    ``newest`` evicts the most recently admitted slot (FIFO fairness: the
-    oldest requests finish first); ``longest`` evicts the slot with the most
-    generation left (frees its blocks for the longest time).  ``exclude``
-    is the grower itself — self-preemption is the caller's last resort when
-    no other slot exists.
-    """
-    cands = [s for s in active if s != exclude]
-    if not cands:
-        return None
-    if policy == "newest":
-        return max(cands, key=lambda s: admit_seq[s])
-    assert policy == "longest", policy
-    return max(cands, key=lambda s: (remaining(s), admit_seq[s]))
-
-
-def _finalize_stats(stats: Dict, finished: Dict, t0: float) -> Dict:
-    dt = time.time() - t0
-    total = sum(len(v) for v in finished.values())
-    step_s = stats.pop("step_s")
-    stats.update(
-        served=len(finished),
-        total_tokens=total,
-        wall_s=dt,
-        tok_s=total / max(dt, 1e-9),
-        p50_step_ms=_percentile(step_s, 50) * 1e3,
-        p99_step_ms=_percentile(step_s, 99) * 1e3,
-    )
-    return stats
+def make_engine(params, cfg, prompts: List[np.ndarray], *, slots: int,
+                max_len: int, block_k: int = 32,
+                pool_blocks: Optional[int] = None,
+                frames: Optional[List[np.ndarray]] = None):
+    """Family -> CacheEngine dispatch; the only family switch in serving."""
+    if cfg.family in ("dense", "moe"):
+        return PagedKVEngine(params, cfg, prompts, slots=slots,
+                             max_len=max_len, block_k=block_k,
+                             pool_blocks=pool_blocks)
+    if cfg.family == "ssm":
+        return SSMStateEngine(params, cfg, prompts, slots=slots,
+                              max_len=max_len, block_k=block_k,
+                              pool_blocks=pool_blocks)
+    if cfg.family == "encdec":
+        if frames is None:
+            raise ValueError("encdec serving needs per-request encoder "
+                             "frames (frames=[(S_enc, d_model) arrays])")
+        return EncDecEngine(params, cfg, prompts, frames=frames,
+                            slots=slots, max_len=max_len, block_k=block_k,
+                            pool_blocks=pool_blocks)
+    raise ValueError(f"no cache engine for family {cfg.family!r}")
 
 
 def serve_paged(params, cfg, prompts: List[np.ndarray], *, slots: int,
@@ -222,7 +139,9 @@ def serve_paged(params, cfg, prompts: List[np.ndarray], *, slots: int,
                 pool_blocks: Optional[int] = None,
                 preempt_policy: str = "newest",
                 deadline_steps: Optional[int] = None,
+                deadline_ms: Optional[float] = None,
                 fault_plan: Optional["faults_mod.FaultPlan"] = None,
+                frames: Optional[List[np.ndarray]] = None,
                 warmup: bool = False, repeats: int = 1,
                 verbose: bool = False) -> Dict:
     """Demand-paged scheduler; returns a stats dict (tok/s, latency, prefill
@@ -231,330 +150,30 @@ def serve_paged(params, cfg, prompts: List[np.ndarray], *, slots: int,
 
     ``gens`` optionally staggers per-request generation lengths (churn: slots
     retire at different steps).  ``temperature``/``top_p`` select tokens via
-    :func:`make_sampler` (0.0 = greedy, the default).  ``pool_blocks`` sizes
-    the block pool below the full ``1 + slots * blocks_per_seq`` reservation
-    to over-commit; exhaustion preempts a ``preempt_policy`` victim and
-    resumes it later with a bitwise-identical continuation (greedy).
-    ``warmup=True`` compiles each jitted step on throwaway inputs before the
-    clock starts; ``repeats > 1`` (benchmarking) reruns the whole schedule
-    on the same compiled steps and keeps the fastest run.
+    :func:`scheduler.make_sampler` (0.0 = greedy, the default).
+    ``pool_blocks`` sizes the block pool below the full
+    ``1 + slots * blocks_per_seq`` reservation to over-commit; exhaustion
+    preempts a ``preempt_policy`` victim and resumes it later with a
+    bitwise-identical continuation.  ``frames`` carries the per-request
+    encoder inputs for the encdec family.  ``warmup=True`` compiles each
+    jitted step on throwaway inputs before the clock starts; ``repeats > 1``
+    (benchmarking) reruns the whole schedule on the same compiled steps and
+    keeps the fastest run.
     """
     requests = len(prompts)
     slots = min(slots, requests)
     gens = list(gens) if gens is not None else [gen] * requests
-    assert len(gens) == requests
     if max_len is None:
         max_len = max(len(p) for p in prompts) + max(gens) + 8
-    bps = paged_kv.blocks_per_seq(max_len, block_k)
-    has_kv = cfg.family in ("dense", "moe")
-    if pool_blocks is not None:
-        if not has_kv:
-            raise ValueError("--pool-blocks needs the paged KV cache "
-                             f"(family {cfg.family} has none)")
-        if pool_blocks < 1 + bps:
-            raise ValueError(
-                f"pool_blocks={pool_blocks} cannot hold one sequence: need "
-                f">= 1 + {bps} (trash + blocks_per_seq(max_len={max_len}))")
-    pool_size = pool_blocks if pool_blocks is not None else 1 + slots * bps
-    sampler = make_sampler(temperature, top_p, cfg.vocab_size)
-    assert preempt_policy in ("newest", "longest"), preempt_policy
-
-    # every step that rewrites the cache donates it — the pool is the big
-    # buffer and must never be copied; slot indices are traced arrays so one
-    # executable serves every slot (a Python-int index would bake the slot
-    # into the jaxpr and recompile per value).  The calibrating and plain
-    # per-slot prefills are distinct executables; each request is resumed
-    # through the same one that first admitted it, which (same executable,
-    # same inputs) is what makes re-prefill bitwise reproducible.
-    calib_prefill = jax.jit(st.make_paged_prefill_step(cfg, calibrate=True),
-                            donate_argnums=(2,))
-    slot_prefill = jax.jit(st.make_paged_prefill_step(cfg, calibrate=False),
-                           donate_argnums=(2,))
-    decode_step = jax.jit(st.make_decode_step(cfg), donate_argnums=(2,))
-
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def release_step(cache, slot):
-        cache = dict(cache, length=cache["length"].at[slot].set(0))
-        if "kv" in cache:
-            cache["kv"] = paged_kv.release_slot(cache["kv"], slot)
-        return cache
-
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def grow_step(cache, slot, idx, block):
-        kv = cache["kv"]
-        return dict(cache, kv=dict(
-            kv, block_table=kv["block_table"].at[slot, idx].set(block)))
-
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def splice_token(tokens, slot, token):
-        return tokens.at[slot].set(token)
-
-    if warmup:
-        # compile every trace against a scratch cache (donated step-to-step);
-        # the scratch pool uses the same num_blocks so the executables match
-        w_cache = T.make_paged_cache(cfg, slots, max_len, block_k=block_k,
-                                     num_blocks=pool_size)
-        w_row = np.full((bps,), paged_kv.TRASH_BLOCK, np.int32)
-        w_row[:1] = 1
-        w_last, w_cache = calib_prefill(
-            params, jnp.asarray(prompts[0])[None], w_cache,
-            jnp.asarray([0], jnp.int32), jnp.asarray(w_row[None], jnp.int32))
-        w_l1, w_cache = slot_prefill(
-            params, jnp.asarray(prompts[0])[None], w_cache,
-            jnp.asarray([0], jnp.int32), jnp.asarray(w_row[None], jnp.int32))
-        sampler(w_l1, jax.random.PRNGKey(0))
-        if has_kv:
-            w_cache = grow_step(w_cache, jnp.int32(0), jnp.int32(1),
-                                jnp.int32(2))
-        w_tok = jnp.zeros((slots,), jnp.int32)
-        w_out, w_cache = decode_step(params, w_tok, w_cache)
-        sampler(w_out, jax.random.PRNGKey(0))
-        w_cache = release_step(w_cache, jnp.int32(0))
-        w_tok2 = splice_token(w_tok, jnp.int32(0), jnp.int32(0))
-        jax.block_until_ready((w_out, w_tok2))
-
-    def _run() -> Dict:
-        # fresh scheduler state per run; the jitted steps above are shared,
-        # so repeats measure serving on warm executables
-        cache = T.make_paged_cache(cfg, slots, max_len, block_k=block_k,
-                                   num_blocks=pool_size)
-        paged = "kv" in cache
-        alloc = paged_kv.BlockAllocator(pool_size) if paged else None
-        pager = _PoolManager(alloc, bps, block_k) if paged else None
-        health = ServeHealth()
-        inj = faults_mod.FaultInjector(fault_plan, health)
-        watchdog = strag.StragglerWatchdog(window=50, threshold=3.0,
-                                           min_history=4,
-                                           on_straggler=health.straggler)
-        kbox = [jax.random.PRNGKey(sample_seed)]
-
-        def select(logits):
-            if temperature == 0.0:
-                return sampler(logits, kbox[0])      # key unused
-            kbox[0], sub = jax.random.split(kbox[0])
-            return sampler(logits, sub)
-
-        stats: Dict = {"batch_prefills": 0, "slot_prefills": 0,
-                       "decode_steps": 0, "step_s": []}
-        queue = deque(range(requests))
-        generated: Dict[int, List[int]] = {}
-        finished: Dict[int, List[int]] = {}
-        expired: Dict[int, List[int]] = {}
-        failed: Dict[int, List[int]] = {}
-        resume_prefix: Dict[int, List[int]] = {}
-        replay: Dict[int, List[int]] = {}
-        admit_step0: Dict[int, int] = {}    # first admission, for deadlines
-        admit_seq: Dict[int, int] = {}      # per-slot admission order
-        active: Dict[int, int] = {}
-        seq_counter = [0]
-        calib_rid = [None]                  # request that fixed the scales
-        tokens = jnp.zeros((slots,), jnp.int32)
-        step = 0
-
-        def free_slot(slot):
-            nonlocal cache
-            if paged:
-                pager.release(slot)
-            cache = release_step(cache, jnp.int32(slot))
-
-        def preempt(vslot, *, reason):
-            nonlocal cache
-            rid = active.pop(vslot)
-            pre = generated.pop(rid) + replay.pop(rid, [])
-            resume_prefix[rid] = pre
-            free_slot(vslot)
-            queue.appendleft(rid)           # victims resume first
-            health.count("preemptions")
-            health.event("preempt", step, rid=rid, slot=vslot,
-                         policy=preempt_policy, reason=reason,
-                         prefix_tokens=len(pre))
-            if verbose:
-                print(f"[serve] step {step}: preempted request {rid} "
-                      f"(slot {vslot}, {reason})", flush=True)
-
-        t0 = time.time()
-        while active or queue:
-            ts_iter = time.perf_counter()
-            prefills0 = stats["slot_prefills"]
-            preempts0 = health.counters["preemptions"]
-            inj.on_step(step)
-            if paged:
-                inj.squeeze_pool(step, alloc)
-
-            # ---- growth: cover this step's write position for every slot;
-            # on exhaustion, preempt a victim and retry --------------------
-            if paged:
-                for slot in list(sorted(active)):
-                    if slot not in active:
-                        continue            # preempted by an earlier grower
-                    rid = active[slot]
-                    upto = len(prompts[rid]) + len(generated[rid])
-                    while pager.short(slot, upto) > 0:
-                        try:
-                            start, ids = pager.grow(slot,
-                                                    pager.short(slot, upto))
-                        except paged_kv.BlockAllocationError as e:
-                            health.event("pool_pressure", step, slot=slot,
-                                         requested=e.requested, free=e.free,
-                                         live=e.live,
-                                         high_water=e.high_water)
-                            victim = _pick_victim(
-                                active, slot, preempt_policy, admit_seq,
-                                lambda s: gens[active[s]]
-                                - len(generated[active[s]]))
-                            if victim is None:
-                                # sole active slot: park it in the queue and
-                                # wait for the pool (fault hold) to drain
-                                preempt(slot, reason="self")
-                                break
-                            preempt(victim, reason="growth")
-                            continue
-                        for j, b in enumerate(ids):
-                            cache = grow_step(cache, jnp.int32(slot),
-                                              jnp.int32(start + j),
-                                              jnp.int32(b))
-
-            # ---- admission: fill idle slots from the queue ---------------
-            idle = [s for s in range(slots) if s not in active]
-            while queue and idle:
-                rid = queue[0]
-                s_len = len(prompts[rid])
-                # cover the prompt plus this step's decode write
-                need = paged_kv.blocks_per_seq(s_len + 1, block_k)
-                if paged and alloc.free_count < need:
-                    health.count("admission_stalls")
-                    health.event("admission_stall", step, rid=rid,
-                                 need=need, free=alloc.free_count)
-                    break
-                queue.popleft()
-                slot = idle.pop(0)
-                if paged:
-                    row = pager.admit_row(slot, s_len + 1)
-                else:
-                    row = np.full((bps,), paged_kv.TRASH_BLOCK, np.int32)
-                if calib_rid[0] is None:
-                    calib_rid[0] = rid
-                fn = calib_prefill if rid == calib_rid[0] else slot_prefill
-                last1, cache = fn(params, jnp.asarray(prompts[rid])[None],
-                                  cache, jnp.asarray([slot], jnp.int32),
-                                  jnp.asarray(row[None], jnp.int32))
-                stats["slot_prefills"] += 1
-                health.count("admissions")
-                active[slot] = rid
-                admit_seq[slot] = seq_counter[0]
-                seq_counter[0] += 1
-                if rid in resume_prefix:
-                    pre = resume_prefix.pop(rid)
-                    generated[rid] = [pre[0]]
-                    replay[rid] = pre[1:]
-                    first = pre[0]
-                    health.count("resumes")
-                    health.count("resumed_tokens_replayed", len(pre) - 1)
-                    health.event("resume", step, rid=rid, slot=slot,
-                                 prefix_tokens=len(pre))
-                else:
-                    admit_step0[rid] = step
-                    t1, ok1 = select(last1)
-                    if not bool(np.asarray(ok1)[0]):
-                        failed[rid] = []
-                        del active[slot]
-                        free_slot(slot)
-                        idle.insert(0, slot)
-                        health.count("nan_retired")
-                        health.event("nan_retired", step, rid=rid, slot=slot,
-                                     where="prefill")
-                        continue
-                    first = int(np.asarray(t1)[0])
-                    generated[rid] = [first]
-                tokens = splice_token(tokens, jnp.int32(slot),
-                                      jnp.int32(first))
-
-            if not active:
-                step += 1
-                if queue:
-                    continue                # stalled; pool will drain
-                break
-
-            # ---- decode one token per slot -------------------------------
-            ts = time.perf_counter()
-            logits, cache = decode_step(params, tokens, cache)
-            logits = inj.corrupt_logits(step, logits)
-            toks, okv = select(logits)
-            tok_host, ok_host = jax.device_get((toks, okv))
-            stats["step_s"].append(time.perf_counter() - ts)
-            stats["decode_steps"] += 1
-            tokens = toks
-
-            for slot in sorted(active):
-                rid = active[slot]
-                if not ok_host[slot]:
-                    # NaN/Inf logits: retire the request, keep the batch up
-                    failed[rid] = generated.pop(rid)
-                    del active[slot]
-                    replay.pop(rid, None)
-                    free_slot(slot)
-                    health.count("nan_retired")
-                    health.event("nan_retired", step, rid=rid, slot=slot,
-                                 where="decode")
-                    continue
-                if replay.get(rid):
-                    nxt = replay[rid].pop(0)
-                    if not replay[rid]:
-                        del replay[rid]
-                    if nxt != int(tok_host[slot]):
-                        # greedy replay re-derives the recorded token; only
-                        # a sampled run actually needs the splice
-                        tokens = splice_token(tokens, jnp.int32(slot),
-                                              jnp.int32(nxt))
-                else:
-                    nxt = int(tok_host[slot])
-                generated[rid].append(nxt)
-                if len(generated[rid]) >= gens[rid]:
-                    finished[rid] = generated.pop(rid)
-                    del active[slot]
-                    replay.pop(rid, None)
-                    free_slot(slot)
-                elif (deadline_steps is not None
-                      and step - admit_step0[rid] + 1 >= deadline_steps):
-                    expired[rid] = generated.pop(rid)
-                    del active[slot]
-                    replay.pop(rid, None)
-                    free_slot(slot)
-                    health.count("deadline_cancelled")
-                    health.event("deadline", step, rid=rid, slot=slot,
-                                 tokens=len(expired[rid]))
-            watchdog.observe(
-                step, time.perf_counter() - ts_iter,
-                expect_slow=(stats["slot_prefills"] != prefills0
-                             or health.counters["preemptions"] != preempts0))
-            step += 1
-
-        if paged:
-            inj.drain(alloc)
-            health.pool("kv", alloc)
-        stats["leaked_blocks"] = alloc.live_count if paged else 0
-        stats["finished"] = finished
-        stats["expired"] = expired
-        stats["failed"] = failed
-        stats["preemptions"] = health.counters["preemptions"]
-        stats["resumes"] = health.counters["resumes"]
-        stats["health"] = health.to_dict()
-        stats["health"]["straggler_summary"] = watchdog.summary()
-        # analytic decode-read traffic (int8 K+V, mean live-block occupancy)
-        nl = cfg.n_layers
-        prompt_len = len(prompts[0])
-        mean_gen = sum(gens) // (2 * len(gens))
-        mean_blocks = paged_kv.blocks_per_seq(prompt_len + mean_gen, block_k)
-        stats["kv_bytes_per_step"] = (2 * nl * slots * cfg.n_kv_heads
-                                      * mean_blocks * block_k * cfg.hd)
-        return _finalize_stats(stats, finished, t0)
-
-    best = _run()
-    for _ in range(repeats - 1):
-        run = _run()
-        if run["tok_s"] > best["tok_s"]:
-            best = run
-    return best
+    engine = make_engine(params, cfg, prompts, slots=slots, max_len=max_len,
+                         block_k=block_k, pool_blocks=pool_blocks,
+                         frames=frames)
+    return sched.run_schedule(
+        engine, prompts, gens=gens, temperature=temperature, top_p=top_p,
+        sample_seed=sample_seed, preempt_policy=preempt_policy,
+        deadline_steps=deadline_steps, deadline_ms=deadline_ms,
+        fault_plan=fault_plan, warmup=warmup, repeats=repeats,
+        verbose=verbose)
 
 
 def serve_dense(params, cfg, prompts: List[np.ndarray], *, slots: int,
@@ -575,7 +194,7 @@ def serve_dense(params, cfg, prompts: List[np.ndarray], *, slots: int,
     if max_len is None:
         max_len = prompt_len + max(gens) + 8
     seq_pad = prompt_len + max(gens)    # fixed re-prefill width (one trace)
-    sampler = make_sampler(temperature, top_p, cfg.vocab_size)
+    sampler = sched.make_sampler(temperature, top_p, cfg.vocab_size)
 
     prefill_step = jax.jit(st.make_prefill_step(cfg, max_len))
     decode_step = jax.jit(st.make_decode_step(cfg), donate_argnums=(2,))
@@ -591,7 +210,9 @@ def serve_dense(params, cfg, prompts: List[np.ndarray], *, slots: int,
         w_seqs = jnp.zeros((slots, seq_pad), jnp.int32)
         w_lens = jnp.full((slots,), prompt_len, jnp.int32)
         _, w_cache = reprefill_step(params, w_seqs, w_lens)
-        w_sel, _ = sampler(w_last, jax.random.PRNGKey(0))
+        w_key = (jax.random.PRNGKey(0) if temperature == 0.0
+                 else jnp.stack([jax.random.PRNGKey(0)] * slots))
+        w_sel, _ = sampler(w_last, w_key)
         w_out, _ = decode_step(params, w_sel.astype(jnp.int32), w_cache)
         jax.block_until_ready(w_out)
 
@@ -602,14 +223,16 @@ def serve_dense(params, cfg, prompts: List[np.ndarray], *, slots: int,
         generated: Dict[int, List[int]] = {}
         finished: Dict[int, List[int]] = {}
         active: Dict[int, int] = {}
-        kbox = [jax.random.PRNGKey(sample_seed)]
+        keys = sched.RequestKeys(sample_seed)
 
         def select(logits):
             if temperature == 0.0:
-                toks, _ = sampler(logits, kbox[0])   # key unused
+                toks, _ = sampler(logits, keys.base)   # key unused
                 return toks
-            kbox[0], sub = jax.random.split(kbox[0])
-            toks, _ = sampler(logits, sub)
+            ks = jnp.stack([
+                keys.key(active[s], len(generated.get(active[s], [])))
+                if s in active else keys.base for s in range(slots)])
+            toks, _ = sampler(logits, ks)
             return toks
 
         t0 = time.time()
@@ -665,7 +288,7 @@ def serve_dense(params, cfg, prompts: List[np.ndarray], *, slots: int,
         nl = cfg.n_layers
         stats["kv_bytes_per_step"] = (2 * nl * slots * cfg.n_kv_heads
                                       * max_len * cfg.hd)
-        return _finalize_stats(stats, finished, t0)
+        return sched.finalize_stats(stats, finished, t0)
 
     best = _run()
     for _ in range(repeats - 1):
@@ -705,7 +328,9 @@ def serve_speculative(params, cfg, prompts: List[np.ndarray], *, slots: int,
                       warmup: bool = False, repeats: int = 1,
                       verbose: bool = False) -> Dict:
     """Greedy speculative scheduler, drafter-aware about cache sharing,
-    with the same demand-paged over-commit machinery as :func:`serve_paged`.
+    with the same demand-paged over-commit machinery as :func:`serve_paged`
+    (dense/MoE paged caches only; implemented in
+    `scheduler.run_speculative`).
 
     Per round, for every slot at once: the drafter runs ``gamma`` greedy
     steps fused into one ``lax.scan`` launch (`steps.make_draft_loop`), the
@@ -750,473 +375,12 @@ def serve_speculative(params, cfg, prompts: List[np.ndarray], *, slots: int,
     ``(draft_params, draft_cfg)`` pair; ``None`` self-drafts with the full
     target (see :func:`make_self_draft`).
     """
-    self_draft = draft is None
-    draft_params, dcfg = draft if draft is not None else (params, cfg)
-    assert cfg.family in ("dense", "moe"), cfg.family
-    assert dcfg.family in ("dense", "moe"), dcfg.family
-    assert dcfg.vocab_size == cfg.vocab_size, "drafter must share the vocab"
-    requests = len(prompts)
-    prompt_len = len(prompts[0])
-    slots = min(slots, requests)
-    gens = list(gens) if gens is not None else [gen] * requests
-    assert len(gens) == requests
-    if max_len is None:
-        # +gamma: the cache briefly holds the unaccepted draft tail before
-        # the post-verify truncation
-        max_len = prompt_len + max(gens) + gamma + 8
-    bps = paged_kv.blocks_per_seq(max_len, block_k)
-    if pool_blocks is not None and pool_blocks < 1 + bps:
-        raise ValueError(
-            f"pool_blocks={pool_blocks} cannot hold one sequence: need "
-            f">= 1 + {bps} (trash + blocks_per_seq(max_len={max_len}))")
-    pool_size = pool_blocks if pool_blocks is not None else 1 + slots * bps
-    assert preempt_policy in ("newest", "longest"), preempt_policy
-
-    t_calib = jax.jit(st.make_paged_prefill_step(cfg, calibrate=True),
-                      donate_argnums=(2,))
-    t_slot = jax.jit(st.make_paged_prefill_step(cfg, calibrate=False),
-                     donate_argnums=(2,))
-    d_calib = d_slot = None
-    if not self_draft:
-        d_calib = jax.jit(st.make_paged_prefill_step(dcfg, calibrate=True),
-                          donate_argnums=(2,))
-        d_slot = jax.jit(st.make_paged_prefill_step(dcfg, calibrate=False),
-                         donate_argnums=(2,))
-    draft_loop = jax.jit(st.make_draft_loop(dcfg, gamma),
-                         donate_argnums=(2,))
-    verify_step = jax.jit(st.make_verify_step(cfg), donate_argnums=(2,))
-
-    @jax.jit
-    def select_targets(vlogits):
-        # argmax + finite-guard in one launch: a NaN anywhere in a slot's
-        # verify logits retires that slot instead of emitting garbage
-        return (jnp.argmax(vlogits, axis=-1).astype(jnp.int32),
-                jnp.isfinite(vlogits).all(axis=(-1, -2)))
-
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def truncate_step(cache, new_lens):
-        cache = dict(cache, length=new_lens)
-        cache["kv"] = paged_kv.truncate_lengths(cache["kv"], new_lens)
-        return cache
-
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def release_step(cache, slot):
-        cache = dict(cache, length=cache["length"].at[slot].set(0))
-        cache["kv"] = paged_kv.release_slot(cache["kv"], slot)
-        return cache
-
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def grow_step(cache, slot, idx, block):
-        kv = cache["kv"]
-        return dict(cache, kv=dict(
-            kv, block_table=kv["block_table"].at[slot, idx].set(block)))
-
-    @functools.partial(jax.jit, donate_argnums=(0,))
-    def rollback_step(cache, slot, new_len):
-        # block-level rollback: trash the tail table entries past new_len
-        # (the host frees the ids via paged_kv.tail_blocks)
-        cache = dict(cache, length=cache["length"].at[slot].set(new_len))
-        cache["kv"] = paged_kv.rollback_slot(cache["kv"], slot, new_len)
-        return cache
-
-    if warmup:
-        w_cache = T.make_paged_cache(cfg, slots, max_len, block_k=block_k,
-                                     num_blocks=pool_size)
-        w_row = np.full((bps,), paged_kv.TRASH_BLOCK, np.int32)
-        w_row[:1] = 1
-        w_sid = jnp.asarray([0], jnp.int32)
-        w_rowj = jnp.asarray(w_row[None], jnp.int32)
-        w_prompt = jnp.asarray(prompts[0])[None]
-        w_last, w_cache = t_calib(params, w_prompt, w_cache, w_sid, w_rowj)
-        _, w_cache = t_slot(params, w_prompt, w_cache, w_sid, w_rowj)
-        w_cache = grow_step(w_cache, jnp.int32(0), jnp.int32(1), jnp.int32(2))
-        w_pend = jnp.argmax(w_last, -1).astype(jnp.int32)
-        w_pend = jnp.broadcast_to(w_pend[0], (slots,))
-        w_lens = jnp.zeros((slots,), jnp.int32).at[0].set(prompt_len)
-        w_dcache = None
-        if self_draft:
-            w_drafts, w_cache = draft_loop(params, w_pend, w_cache)
-            w_cache = truncate_step(w_cache, w_lens)
-        else:
-            w_dcache = T.make_paged_cache(dcfg, slots, max_len,
-                                          block_k=block_k,
-                                          num_blocks=pool_size)
-            _, w_dcache = d_calib(draft_params, w_prompt, w_dcache, w_sid,
-                                  w_rowj)
-            _, w_dcache = d_slot(draft_params, w_prompt, w_dcache, w_sid,
-                                 w_rowj)
-            w_dcache = grow_step(w_dcache, jnp.int32(0), jnp.int32(1),
-                                 jnp.int32(2))
-            w_drafts, w_dcache = draft_loop(draft_params, w_pend, w_dcache)
-            w_dcache = truncate_step(w_dcache, w_lens)
-            w_dcache = rollback_step(w_dcache, jnp.int32(0),
-                                     jnp.int32(prompt_len))
-            w_dcache = release_step(w_dcache, jnp.int32(0))
-        w_in = jnp.concatenate([w_pend[:, None], w_drafts[:, :-1]], axis=1)
-        w_vlog, w_cache = verify_step(params, w_in, w_cache)
-        select_targets(w_vlog)
-        w_cache = truncate_step(w_cache, w_lens)
-        w_cache = rollback_step(w_cache, jnp.int32(0), jnp.int32(prompt_len))
-        w_cache = release_step(w_cache, jnp.int32(0))
-        jax.block_until_ready(w_vlog)
-
-    def _run() -> Dict:
-        cache = T.make_paged_cache(cfg, slots, max_len, block_k=block_k,
-                                   num_blocks=pool_size)
-        alloc = paged_kv.BlockAllocator(pool_size)
-        pager = _PoolManager(alloc, bps, block_k)
-        dcache = dalloc = d_pager = None
-        if not self_draft:
-            dcache = T.make_paged_cache(dcfg, slots, max_len,
-                                        block_k=block_k,
-                                        num_blocks=pool_size)
-            dalloc = paged_kv.BlockAllocator(pool_size)
-            d_pager = _PoolManager(dalloc, bps, block_k)
-        health = ServeHealth()
-        inj = faults_mod.FaultInjector(fault_plan, health)
-        watchdog = strag.StragglerWatchdog(window=50, threshold=3.0,
-                                           min_history=4,
-                                           on_straggler=health.straggler)
-        stats: Dict = {"batch_prefills": 0, "slot_prefills": 0,
-                       "decode_steps": 0, "draft_steps": 0,
-                       "verify_steps": 0, "drafts_proposed": 0,
-                       "drafts_accepted": 0, "gamma": gamma,
-                       "slot_accept": {s: [0, 0] for s in range(slots)},
-                       "step_s": []}
-        queue = deque(range(requests))
-        generated: Dict[int, List[int]] = {}
-        finished: Dict[int, List[int]] = {}
-        expired: Dict[int, List[int]] = {}
-        failed: Dict[int, List[int]] = {}
-        resume_prefix: Dict[int, List[int]] = {}
-        expect: Dict[int, List[int]] = {}   # recorded prefix, re-asserted
-        admit_step0: Dict[int, int] = {}
-        admit_seq: Dict[int, int] = {}
-        active: Dict[int, int] = {}
-        seq_counter = [0]
-        calib_rid = [None]
-        cur_lens = np.zeros((slots,), np.int32)
-        pend_h = np.zeros((slots,), np.int32)
-        step = 0
-
-        def free_slot(slot):
-            nonlocal cache, dcache
-            pager.release(slot)
-            cache = release_step(cache, jnp.int32(slot))
-            if not self_draft:
-                d_pager.release(slot)
-                dcache = release_step(dcache, jnp.int32(slot))
-            # shared-cache drafters must never hold their own blocks; a
-            # distinct drafter's table stays in lockstep with the target's
-            assert (d_pager is None or
-                    set(d_pager.owned) == set(pager.owned))
-            cur_lens[slot] = 0
-
-        def preempt(vslot, *, reason):
-            rid = active.pop(vslot)
-            pre = generated.pop(rid)
-            resume_prefix[rid] = pre
-            expect.pop(rid, None)
-            free_slot(vslot)
-            queue.appendleft(rid)
-            health.count("preemptions")
-            health.event("preempt", step, rid=rid, slot=vslot,
-                         policy=preempt_policy, reason=reason,
-                         prefix_tokens=len(pre))
-            if verbose:
-                print(f"[serve-spec] step {step}: preempted request {rid} "
-                      f"(slot {vslot}, {reason})", flush=True)
-
-        parked: set = set()             # slots skipping this round's draft
-
-        def park(slot):
-            """Gentle pressure tier: skip this slot's speculation for the
-            round and give back its own over-coverage tail (blocks past the
-            accepted prefix) on every pool.  Its own tail only — another
-            slot's gamma coverage is what that slot's in-flight draft writes
-            into this round, so reclaiming it would corrupt that stream."""
-            nonlocal cache, dcache
-            keep = int(cur_lens[slot])
-            freed = pager.reclaim_tail(slot, keep)
-            if not self_draft:
-                freed += d_pager.reclaim_tail(slot, keep)
-            cache = rollback_step(cache, jnp.int32(slot), jnp.int32(keep))
-            if not self_draft:
-                dcache = rollback_step(dcache, jnp.int32(slot),
-                                       jnp.int32(keep))
-            parked.add(slot)
-            health.count("spec_parks")
-            health.event("park", step, slot=slot, rid=active[slot],
-                         freed=freed)
-
-        def grow_all(slot, upto, pg, cache_name):
-            """Cover ``upto`` positions for one slot on one pool; park,
-            then preempt, under pressure.  Returns False once the slot is
-            out of the round (parked or preempted)."""
-            nonlocal cache, dcache
-            while slot in active and pg.short(slot, upto) > 0:
-                try:
-                    start, ids = pg.grow(slot, pg.short(slot, upto))
-                except paged_kv.BlockAllocationError as e:
-                    health.event("pool_pressure", step, slot=slot,
-                                 pool=cache_name, requested=e.requested,
-                                 free=e.free, live=e.live,
-                                 high_water=e.high_water)
-                    others = [s for s in active
-                              if s != slot and s not in parked]
-                    if others:
-                        # someone else is still speculating this round, so
-                        # sitting it out cannot stall the whole batch
-                        park(slot)
-                        return False
-                    victim = _pick_victim(
-                        active, slot, preempt_policy, admit_seq,
-                        lambda s: gens[active[s]]
-                        - len(generated[active[s]]))
-                    if victim is None:
-                        preempt(slot, reason="self")
-                        return False
-                    preempt(victim, reason="growth")
-                    parked.discard(victim)
-                    continue
-                for j, b in enumerate(ids):
-                    if cache_name == "kv":
-                        cache = grow_step(cache, jnp.int32(slot),
-                                          jnp.int32(start + j),
-                                          jnp.int32(b))
-                    else:
-                        dcache = grow_step(dcache, jnp.int32(slot),
-                                           jnp.int32(start + j),
-                                           jnp.int32(b))
-            return slot in active and slot not in parked
-
-        t0 = time.time()
-        while active or queue:
-            ts_iter = time.perf_counter()
-            prefills0 = stats["slot_prefills"]
-            preempts0 = health.counters["preemptions"]
-            inj.on_step(step)
-            inj.squeeze_pool(step, alloc)
-
-            # ---- growth: every slot needs len + gamma coverage this round
-            parked.clear()
-            for slot in list(sorted(active)):
-                if slot not in active:
-                    continue
-                upto = int(cur_lens[slot]) + gamma
-                if not grow_all(slot, upto, pager, "kv"):
-                    continue
-                if not self_draft:
-                    grow_all(slot, upto, d_pager, "draft_kv")
-
-            # ---- admission -----------------------------------------------
-            idle = [s for s in range(slots) if s not in active]
-            while queue and idle:
-                rid = queue[0]
-                s_len = len(prompts[rid])
-                need = paged_kv.blocks_per_seq(s_len + gamma, block_k)
-                pools_ok = alloc.free_count >= need and (
-                    self_draft or dalloc.free_count >= need)
-                if not pools_ok:
-                    health.count("admission_stalls")
-                    health.event("admission_stall", step, rid=rid,
-                                 need=need, free=alloc.free_count)
-                    break
-                queue.popleft()
-                slot = idle.pop(0)
-                row = pager.admit_row(slot, s_len + gamma)
-                if calib_rid[0] is None:
-                    calib_rid[0] = rid
-                fn = t_calib if rid == calib_rid[0] else t_slot
-                sid = jnp.asarray([slot], jnp.int32)
-                prompt = jnp.asarray(prompts[rid])[None]
-                last1, cache = fn(params, prompt, cache, sid,
-                                  jnp.asarray(row[None], jnp.int32))
-                stats["slot_prefills"] += 1
-                if not self_draft:
-                    drow = d_pager.admit_row(slot, s_len + gamma)
-                    dfn = d_calib if rid == calib_rid[0] else d_slot
-                    _, dcache = dfn(draft_params, prompt, dcache, sid,
-                                    jnp.asarray(drow[None], jnp.int32))
-                    stats["slot_prefills"] += 1
-                health.count("admissions")
-                active[slot] = rid
-                admit_seq[slot] = seq_counter[0]
-                seq_counter[0] += 1
-                first_logits = np.asarray(last1[0])
-                if not np.isfinite(first_logits).all():
-                    failed[rid] = []
-                    del active[slot]
-                    free_slot(slot)
-                    idle.insert(0, slot)
-                    health.count("nan_retired")
-                    health.event("nan_retired", step, rid=rid, slot=slot,
-                                 where="prefill")
-                    continue
-                first = int(first_logits.argmax())
-                if rid in resume_prefix:
-                    pre = resume_prefix.pop(rid)
-                    assert first == pre[0], (
-                        f"resume divergence for request {rid}: re-prefill "
-                        f"token {first} != recorded {pre[0]}")
-                    expect[rid] = pre
-                    health.count("resumes")
-                    health.count("resumed_tokens_replayed", len(pre) - 1)
-                    health.event("resume", step, rid=rid, slot=slot,
-                                 prefix_tokens=len(pre))
-                else:
-                    admit_step0[rid] = step
-                generated[rid] = [first]
-                pend_h[slot] = first
-                cur_lens[slot] = s_len
-
-            if not active:
-                step += 1
-                if queue:
-                    continue
-                break
-
-            # ---- one draft -> verify -> accept round ---------------------
-            pending = jnp.asarray(pend_h)
-            ts = time.perf_counter()
-            if self_draft:
-                drafts, cache = draft_loop(params, pending, cache)
-                # length-only rewind: verify overwrites the draft K/V rows
-                cache = truncate_step(cache, jnp.asarray(cur_lens))
-            else:
-                drafts, dcache = draft_loop(draft_params, pending, dcache)
-            verify_in = jnp.concatenate([pending[:, None], drafts[:, :-1]],
-                                        axis=1)
-            vlogits, cache = verify_step(params, verify_in, cache)
-            vlogits = inj.corrupt_logits(step, vlogits)
-            targets, okv = select_targets(vlogits)
-            drafts_h, targets_h, ok_h = jax.device_get(
-                (drafts, targets, okv))
-            stats["step_s"].append(time.perf_counter() - ts)
-            stats["draft_steps"] += 1
-            stats["verify_steps"] += 1
-
-            new_lens = np.zeros((slots,), np.int32)
-            retiring: List[int] = []
-            for slot in sorted(active):
-                rid = active[slot]
-                if slot in parked:
-                    # sat the round out under pool pressure: nothing
-                    # emitted, prefix stays resident, retries next round.
-                    # Its draft row read through trashed tail entries, so
-                    # its (discarded) logits are exempt from the NaN guard.
-                    new_lens[slot] = cur_lens[slot]
-                    continue
-                if not ok_h[slot]:
-                    failed[rid] = generated.pop(rid)
-                    del active[slot]
-                    expect.pop(rid, None)
-                    health.count("nan_retired")
-                    health.event("nan_retired", step, rid=rid, slot=slot,
-                                 where="verify")
-                    # free after the batch-wide truncate below would also
-                    # work; do it here so the blocks recycle immediately
-                    free_slot(slot)
-                    continue
-                k = 0
-                while (k < gamma
-                       and drafts_h[slot, k] == targets_h[slot, k]):
-                    k += 1
-                if k < gamma:
-                    emit = [int(x) for x in drafts_h[slot, :k]]
-                    emit.append(int(targets_h[slot, k]))
-                else:
-                    emit = [int(x) for x in drafts_h[slot, :gamma]]
-                remaining = gens[rid] - len(generated[rid])
-                emit = emit[:remaining]
-                used_drafts = min(k, len(emit))
-                stats["drafts_proposed"] += gamma
-                stats["drafts_accepted"] += used_drafts
-                stats["slot_accept"][slot][0] += used_drafts
-                stats["slot_accept"][slot][1] += gamma
-                generated[rid].extend(emit)
-                pend_h[slot] = generated[rid][-1]
-                if rid in expect:
-                    # the bitwise resume contract, asserted live: the
-                    # re-emitted greedy continuation must reproduce the
-                    # prefix recorded before preemption
-                    exp = expect[rid]
-                    got = generated[rid]
-                    n = min(len(exp), len(got))
-                    assert got[:n] == exp[:n], (
-                        f"resume divergence for request {rid} at token "
-                        f"{next(i for i in range(n) if got[i] != exp[i])}")
-                    if len(got) >= len(exp):
-                        del expect[rid]
-                if len(generated[rid]) >= gens[rid]:
-                    retiring.append(slot)
-                else:
-                    new_lens[slot] = prompt_len + len(generated[rid]) - 1
-
-            # rollback to the accepted prefix in one shot; retiring /
-            # inactive slots truncate to zero
-            lens_dev = jnp.asarray(new_lens)
-            cache = truncate_step(cache, lens_dev)
-            if not self_draft:
-                dcache = truncate_step(dcache, lens_dev)
-            cur_lens = new_lens
-
-            for slot in retiring:
-                rid = active.pop(slot)
-                finished[rid] = generated.pop(rid)
-                expect.pop(rid, None)
-                free_slot(slot)
-
-            if deadline_steps is not None:
-                for slot in list(sorted(active)):
-                    rid = active[slot]
-                    if step - admit_step0[rid] + 1 >= deadline_steps:
-                        expired[rid] = generated.pop(rid)
-                        del active[slot]
-                        expect.pop(rid, None)
-                        free_slot(slot)
-                        health.count("deadline_cancelled")
-                        health.event("deadline", step, rid=rid, slot=slot,
-                                     tokens=len(expired[rid]))
-            watchdog.observe(
-                step, time.perf_counter() - ts_iter,
-                expect_slow=(stats["slot_prefills"] != prefills0
-                             or health.counters["preemptions"] != preempts0))
-            step += 1
-
-        inj.drain(alloc)
-        health.pool("kv", alloc)
-        if dalloc is not None:
-            health.pool("draft_kv", dalloc)
-        stats["leaked_blocks"] = alloc.live_count + (
-            dalloc.live_count if dalloc is not None else 0)
-        stats["finished"] = finished
-        stats["expired"] = expired
-        stats["failed"] = failed
-        stats["preemptions"] = health.counters["preemptions"]
-        stats["resumes"] = health.counters["resumes"]
-        stats["health"] = health.to_dict()
-        stats["health"]["straggler_summary"] = watchdog.summary()
-        stats["accept_rate"] = (stats["drafts_accepted"]
-                                / max(stats["drafts_proposed"], 1))
-        total_emitted = sum(len(v) for v in finished.values()) - len(finished)
-        stats["tokens_per_verify"] = (total_emitted
-                                      / max(stats["verify_steps"], 1))
-        stats["slot_accept"] = {
-            s: (a / max(p, 1)) for s, (a, p) in stats["slot_accept"].items()}
-        nl = cfg.n_layers
-        mean_gen = sum(gens) // (2 * len(gens))
-        mean_blocks = paged_kv.blocks_per_seq(prompt_len + mean_gen, block_k)
-        stats["kv_bytes_per_step"] = (2 * nl * slots * cfg.n_kv_heads
-                                      * mean_blocks * block_k * cfg.hd)
-        return _finalize_stats(stats, finished, t0)
-
-    best = _run()
-    for _ in range(repeats - 1):
-        run = _run()
-        if run["tok_s"] > best["tok_s"]:
-            best = run
-    return best
+    return sched.run_speculative(
+        params, cfg, prompts, slots=slots, gen=gen, gamma=gamma,
+        draft=draft, block_k=block_k, max_len=max_len, gens=gens,
+        pool_blocks=pool_blocks, preempt_policy=preempt_policy,
+        deadline_steps=deadline_steps, fault_plan=fault_plan,
+        warmup=warmup, repeats=repeats, verbose=verbose)
 
 
 def serve(params, cfg, prompts: List[np.ndarray], *, slots: int, gen: int,
@@ -1228,19 +392,24 @@ def serve(params, cfg, prompts: List[np.ndarray], *, slots: int, gen: int,
           pool_blocks: Optional[int] = None,
           preempt_policy: str = "newest",
           deadline_steps: Optional[int] = None,
+          deadline_ms: Optional[float] = None,
           fault_plan: Optional["faults_mod.FaultPlan"] = None,
+          frames: Optional[List[np.ndarray]] = None,
           metrics_json: Optional[str] = None,
           warmup: bool = False, repeats: int = 1,
           verbose: bool = False) -> Dict:
     """Dispatch on the cache layout / speculative mode; see
     :func:`serve_paged` and :func:`serve_speculative`.  ``draft`` switches
-    to the speculative scheduler (greedy only; paged caches only).  The
+    to the speculative scheduler (greedy only; paged dense/MoE only).  The
     over-commit / chaos knobs (``pool_blocks``, ``preempt_policy``,
-    ``deadline_steps``, ``fault_plan``) are paged-path features;
-    ``metrics_json`` writes the run's health record as one JSON artifact."""
+    ``deadline_steps``, ``deadline_ms``, ``fault_plan``) are paged-path
+    features; ``frames`` carries encdec encoder inputs; ``metrics_json``
+    writes the run's health record as one JSON artifact."""
     if draft is not None:
         assert cache_kind == "paged", "speculative serving is paged-only"
         assert temperature == 0.0, "speculative serving is greedy-only"
+        assert deadline_ms is None, \
+            "--deadline-ms is not wired into the speculative loop"
         draft_pair = None if draft == "self" else draft
         stats = serve_speculative(
             params, cfg, prompts, slots=slots, gen=gen, gamma=gamma,
@@ -1254,13 +423,14 @@ def serve(params, cfg, prompts: List[np.ndarray], *, slots: int, gen: int,
             max_len=max_len, gens=gens, temperature=temperature,
             top_p=top_p, pool_blocks=pool_blocks,
             preempt_policy=preempt_policy, deadline_steps=deadline_steps,
-            fault_plan=fault_plan, warmup=warmup, repeats=repeats,
-            verbose=verbose)
+            deadline_ms=deadline_ms, fault_plan=fault_plan, frames=frames,
+            warmup=warmup, repeats=repeats, verbose=verbose)
     else:
         assert cache_kind == "dense", cache_kind
         if pool_blocks is not None or deadline_steps is not None or (
+                deadline_ms is not None) or (
                 fault_plan is not None and fault_plan.armed):
-            raise ValueError("pool_blocks / deadline_steps / faults are "
+            raise ValueError("pool_blocks / deadlines / faults are "
                              "paged-path features; --cache dense has no "
                              "block pool to squeeze")
         stats = serve_dense(params, cfg, prompts, slots=slots, gen=gen,
@@ -1316,7 +486,7 @@ def main(argv=None) -> None:
                     help="over-commit: size the KV block pool below the "
                          "full slots*blocks_per_seq reservation; pool "
                          "pressure preempts and resumes requests "
-                         "(bitwise-identical outputs under greedy)")
+                         "(bitwise-identical outputs)")
     ap.add_argument("--preempt-policy", choices=("newest", "longest"),
                     default="newest",
                     help="victim choice under pool pressure: most recently "
@@ -1324,6 +494,10 @@ def main(argv=None) -> None:
     ap.add_argument("--deadline-steps", type=int, default=None,
                     help="cancel a request still unfinished this many "
                          "scheduler steps after first admission")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="cancel a request still unfinished this many "
+                         "wall-clock ms after first admission; admission "
+                         "becomes earliest-deadline-first")
     ap.add_argument("--metrics-json", default=None,
                     help="write the run's serving-health record "
                          "(preemptions, stragglers, faults, pool "
@@ -1338,13 +512,19 @@ def main(argv=None) -> None:
     # "auto" = fused on: the dispatch layer itself picks compiled Pallas on
     # TPU and the bit-matching XLA twin elsewhere, so fused is always safe.
     cfg = cfg.replace(attn_fused=(args.fused != "off"))
-    assert cfg.family != "encdec", "use examples/serve_seamless.py for encdec"
 
     key = jax.random.PRNGKey(args.seed)
     params = st.init_params_fn(cfg)(key)
     rng = np.random.default_rng(args.seed)
     prompts = [rng.integers(0, cfg.vocab_size, args.prompt_len,
                             dtype=np.int32) for _ in range(args.requests)]
+    frames = None
+    if cfg.family == "encdec":
+        # synthetic frontend embeddings standing in for the audio encoder
+        # frontend, one shared encoder length per run
+        frames = [np.asarray(rng.normal(size=(args.prompt_len, cfg.d_model)),
+                             np.float32) * 0.02
+                  for _ in range(args.requests)]
 
     draft = args.draft
     if draft and draft != "self":
@@ -1368,11 +548,13 @@ def main(argv=None) -> None:
                   pool_blocks=args.pool_blocks,
                   preempt_policy=args.preempt_policy,
                   deadline_steps=args.deadline_steps,
+                  deadline_ms=args.deadline_ms,
                   fault_plan=fault_plan if fault_plan.armed else None,
+                  frames=frames,
                   metrics_json=args.metrics_json,
                   verbose=True)
     mode = f"{args.cache}+spec" if args.draft else args.cache
-    print(f"[{mode}] served {stats['served']} requests, "
+    print(f"[{mode}:{cfg.family}] served {stats['served']} requests, "
           f"{stats['total_tokens']} tokens in {stats['wall_s']:.2f}s "
           f"({stats['tok_s']:.1f} tok/s, {stats['decode_steps']} decode "
           f"steps, {stats['batch_prefills']} batch + "

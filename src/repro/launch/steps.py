@@ -163,8 +163,15 @@ def make_paged_prefill_step(cfg: ModelConfig, *, calibrate: bool):
     re-prefills the rest of the batch.  ``calibrate`` is static: the first
     wave fixes the pool's per-layer scales, admissions reuse them.
     ``make_decode_step`` already handles paged caches transparently.
+
+    The encdec variant takes the encoder frames too:
+    (params, frames (B,S_enc,d), tokens, cache, slot_ids, block_ids).
     """
-    assert cfg.family != "encdec", "paged serving is decoder-only"
+    if cfg.family == "encdec":
+        def prefill_step(params, frames, tokens, cache, slot_ids, block_ids):
+            return E.prefill_paged(params, frames, tokens, cfg, cache,
+                                   slot_ids, block_ids, calibrate=calibrate)
+        return prefill_step
 
     def prefill_step(params, tokens, cache, slot_ids, block_ids):
         return T.prefill_paged(params, tokens, cfg, cache, slot_ids,
@@ -178,6 +185,10 @@ def make_decode_step(cfg: ModelConfig):
 
     if cfg.family == "encdec":
         def decode_step(params, token, cache):
+            # trace-time dispatch on the cache layout: the paged serving
+            # path carries the carved cross region's block table
+            if "cross_table" in cache:
+                return E.decode_step_paged(params, token, cfg, cache)
             return E.decode_step(params, token, cfg, cache)
         return decode_step
 

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import attention as core_attn
+from repro.core import paged_kv
 from repro.core import quantization as qlib
 from repro.dist.sharding import shard
 from repro.models import attention as A
@@ -251,5 +252,154 @@ def decode_step(params, token: jax.Array, cfg: ModelConfig, cache: Dict
     cache = dict(cache,
                  self_kv=dict(skv, k_q=k_q, v_q=v_q,
                               length=skv["length"] + 1),
+                 length=cache["length"] + 1)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# paged serving: self KV in the dynamic block pool, cross KV in a carved
+# write-once region of the *same* pool (the paper's weight-stationary bank)
+# ---------------------------------------------------------------------------
+
+def make_paged_cache(cfg: ModelConfig, slots: int, max_len: int, *,
+                     block_k: int, num_blocks: int, cross_table,
+                     enc_len: int) -> Dict:
+    """Paged encdec serving cache.
+
+    Self-attention K/V pages dynamically exactly like a decoder-only model
+    (``kv`` is the standard `paged_kv` pool over the decoder layers).  The
+    encoder's cross K/V lives in ``cross_table``-addressed blocks of the
+    *same* ``k_pages``/``v_pages`` pool — a static region the allocator
+    carved out (`BlockAllocator.carve`), written once per admission and
+    read-only thereafter, with its own per-layer scales.  ``cross_len`` is
+    the fixed encoder length every slot attends over.
+    """
+    nl = cfg.n_layers
+    bps = paged_kv.blocks_per_seq(max_len, block_k)
+    return {
+        "kv": paged_kv.init_kv_pages(nl, num_blocks, cfg.n_kv_heads,
+                                     block_k, cfg.hd, slots, bps),
+        "cross_table": jnp.asarray(cross_table, jnp.int32),
+        "cross_scale_k": jnp.full((nl, 1, 1, 1, 1), 1e-2, jnp.float32),
+        "cross_scale_v": jnp.full((nl, 1, 1, 1, 1), 1e-2, jnp.float32),
+        "cross_len": jnp.full((slots,), enc_len, jnp.int32),
+        "length": jnp.zeros((slots,), jnp.int32),
+    }
+
+
+def prefill_paged(params, frames: jax.Array, tokens: jax.Array,
+                  cfg: ModelConfig, cache: Dict, slot_ids: jax.Array,
+                  block_ids: jax.Array, *, calibrate: bool = False
+                  ) -> Tuple[jax.Array, Dict]:
+    """Per-slot admission: encode + teacher-forced decoder prefill, writing
+    the named slots' self-KV blocks *and* their carved cross-KV region.
+
+    ``calibrate`` fixes all four pool scales (self and cross K/V) from this
+    batch; later admissions quantize into the calibrated scales, exactly
+    like the decoder-only `transformer.prefill_paged`.
+    """
+    b, s = tokens.shape
+    memory = encode(params, frames, cfg, serve=True)
+    logits, ys = decode_sequence(params, tokens, memory, cfg, serve=True)
+    k_s, v_s = ys["self_kv"]                       # (L, B, Hkv, S, hd)
+    kc, vc = ys["cross_kv"]                        # (L, B, Hkv, S_enc, hd)
+    kvc = cache["kv"]
+    nl = kvc["k_pages"].shape[0]
+    block_k = kvc["k_pages"].shape[3]
+    n_blk = paged_kv.blocks_per_seq(s, block_k)
+    enc_len = kc.shape[3]
+    cross_rows = cache["cross_table"][slot_ids]    # (B, cross_bps)
+    cross_bps = cross_rows.shape[1]
+
+    pad = n_blk * block_k - s
+    if pad:
+        k_s = jnp.pad(k_s, ((0, 0),) * 3 + ((0, pad), (0, 0)))
+        v_s = jnp.pad(v_s, ((0, 0),) * 3 + ((0, pad), (0, 0)))
+    cpad = cross_bps * block_k - enc_len
+    if cpad:
+        kc = jnp.pad(kc, ((0, 0),) * 3 + ((0, cpad), (0, 0)))
+        vc = jnp.pad(vc, ((0, 0),) * 3 + ((0, cpad), (0, 0)))
+
+    if calibrate:
+        s_k = qlib.absmax_scale(k_s, axis=(1, 2, 3, 4))
+        s_v = qlib.absmax_scale(v_s, axis=(1, 2, 3, 4))
+        cs_k = qlib.absmax_scale(kc, axis=(1, 2, 3, 4))
+        cs_v = qlib.absmax_scale(vc, axis=(1, 2, 3, 4))
+    else:
+        s_k, s_v = kvc["scale_k"], kvc["scale_v"]
+        cs_k, cs_v = cache["cross_scale_k"], cache["cross_scale_v"]
+
+    def to_blocks(x_q, nb):
+        hkv, hd = x_q.shape[2], x_q.shape[4]
+        x_q = x_q.reshape(nl, b, hkv, nb, block_k, hd)
+        return x_q.transpose(0, 1, 3, 2, 4, 5).reshape(
+            nl, b * nb, hkv, block_k, hd)
+
+    flat_ids = block_ids[:, :n_blk].reshape(-1)
+    cflat = cross_rows.reshape(-1)
+    kvc = dict(
+        kvc,
+        k_pages=kvc["k_pages"]
+        .at[:, flat_ids].set(to_blocks(qlib.quantize(k_s, s_k), n_blk))
+        .at[:, cflat].set(to_blocks(qlib.quantize(kc, cs_k), cross_bps)),
+        v_pages=kvc["v_pages"]
+        .at[:, flat_ids].set(to_blocks(qlib.quantize(v_s, s_v), n_blk))
+        .at[:, cflat].set(to_blocks(qlib.quantize(vc, cs_v), cross_bps)),
+        scale_k=s_k, scale_v=s_v,
+        block_table=kvc["block_table"].at[slot_ids].set(block_ids),
+        length=kvc["length"].at[slot_ids].set(s))
+    cache = dict(cache, kv=kvc, cross_scale_k=cs_k, cross_scale_v=cs_v,
+                 length=cache["length"].at[slot_ids].set(s))
+    return logits[:, -1], cache
+
+
+def decode_step_paged(params, token: jax.Array, cfg: ModelConfig,
+                      cache: Dict) -> Tuple[jax.Array, Dict]:
+    """One decoder token: paged self-attention (tail-block write + gather
+    through the slot's table row) and paged cross-attention against the
+    carved static region — both through the same decode kernel dispatch
+    (`core.attention.paged_decode_attention`)."""
+    x = L.embedding_apply(params["embed"], token[:, None],
+                          dtype=cfg.compute_dtype)
+    norm = L.NORM_APPLY[cfg.norm]
+    spec = cfg.attn_spec(serve=True)
+    kvc = cache["kv"]
+    cross_table = cache["cross_table"]
+    cross_len = cache["cross_len"]
+    b = token.shape[0]
+
+    def body(x, xs):
+        (layer_params, kp, vp, s_k, s_v, cs_k, cs_v) = xs
+        h = norm(layer_params["norm1"], x)
+        slice_ = {"k_pages": kp, "v_pages": vp, "scale_k": s_k,
+                  "scale_v": s_v, "block_table": kvc["block_table"],
+                  "length": kvc["length"]}
+        out, nkv = A.attn_block_decode_paged(layer_params["self_attn"], h,
+                                             slice_, cfg)
+        x = x + out
+        h = norm(layer_params["norm2"], x)
+        # cross decode: one query token against the slot's carved region
+        q = L.linear_apply(layer_params["cross_attn"]["wq"], h,
+                           dtype=cfg.compute_dtype)
+        q = q.reshape(b, 1, cfg.n_heads, cfg.hd).transpose(0, 2, 1, 3)
+        out = core_attn.paged_decode_attention(
+            q[:, :, 0, :], nkv["k_pages"], nkv["v_pages"], cross_table,
+            cs_k.reshape(()), cs_v.reshape(()), cross_len, spec)
+        out = out.reshape(b, 1, cfg.n_heads * cfg.hd)
+        x = x + L.linear_apply(layer_params["cross_attn"]["wo"], out,
+                               dtype=cfg.compute_dtype)
+        h = norm(layer_params["norm3"], x)
+        x = x + M.mlp_apply(layer_params["mlp"], h, cfg)
+        return x, (nkv["k_pages"], nkv["v_pages"])
+
+    xs = (params["decoder"], kvc["k_pages"], kvc["v_pages"], kvc["scale_k"],
+          kvc["scale_v"], cache["cross_scale_k"], cache["cross_scale_v"])
+    x, (k_pages, v_pages) = maybe_scan(body, x, xs, cfg)
+    x = norm(params["final_norm"], x)
+    logits = L.unembed_apply(params["embed"], x,
+                             logical_vocab=cfg.vocab_size)[:, 0]
+    cache = dict(cache,
+                 kv=dict(kvc, k_pages=k_pages, v_pages=v_pages,
+                         length=kvc["length"] + 1),
                  length=cache["length"] + 1)
     return logits, cache

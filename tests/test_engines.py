@@ -1,0 +1,315 @@
+"""Family cache engines under the family-blind scheduler.
+
+Three engine-level contracts, pinned per family:
+
+* **allocator invariants** — ``BlockAllocator.carve`` removes ids from the
+  free list permanently and deterministically (FIFO), carved blocks can
+  never be freed, and carved != leaked;
+* **scheduler transparency** — serving a request through the multi-slot
+  continuous-batching loop emits exactly the tokens a no-scheduler,
+  single-slot run of the *same engine* emits (row independence: slot index,
+  co-residents and admission order never touch a request's numerics);
+* **bitwise preempt/resume** — on every engine, a preempted request resumes
+  to a token-for-token identical continuation: under genuine pool pressure
+  where a pool exists (dense, encdec), and under a forced preemption fault
+  (``FaultPlan.preempt_step``) where one does not (SSM — its per-slot
+  footprint is fixed, so the pool can never run dry naturally), including
+  sampled decoding (per-request count-addressed keys).
+
+Sized against smoke configs; everything runs on CPU.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import paged_kv
+from repro.launch import serve as srv
+from repro.launch import steps as st
+from repro.launch.engines import EncDecEngine, PagedKVEngine, SSMStateEngine
+from repro.launch.faults import FaultPlan
+from repro.launch.scheduler import run_schedule
+
+
+# ---------------------------------------------------------------------------
+# allocator: carve
+# ---------------------------------------------------------------------------
+
+def test_carve_is_deterministic_and_off_the_free_list():
+    a = paged_kv.BlockAllocator(16)
+    ids = a.carve(6)
+    assert ids == list(range(1, 7))          # FIFO: same region every run
+    assert a.carved_count == 6
+    assert a.free_count == 16 - 1 - 6        # trash + carved are gone
+    assert a.live_count == 0                 # carved is NOT live/leaked
+    got = a.alloc(a.free_count)
+    assert set(got) & set(ids) == set()      # never handed out dynamically
+    a.free(got)
+    assert a.live_count == 0
+
+
+def test_carve_shortage_and_double_free_are_errors():
+    a = paged_kv.BlockAllocator(8)
+    with pytest.raises(paged_kv.BlockAllocationError, match="carving"):
+        a.carve(8)                           # only 7 non-trash blocks
+    ids = a.carve(3)
+    with pytest.raises(paged_kv.BlockAllocationError, match="carved"):
+        a.free([ids[0]])
+
+
+# ---------------------------------------------------------------------------
+# rigs
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def ssm_rig():
+    cfg = get_arch("falcon_mamba_7b").smoke.replace(dtype="float32")
+    params = st.init_params_fn(cfg)(jax.random.PRNGKey(3))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, 14, dtype=np.int32)
+               for _ in range(6)]
+    gens = [10, 8, 10, 6, 10, 8]
+    base = srv.serve(params, cfg, prompts, slots=3, gen=10, gens=gens,
+                     cache_kind="paged")
+    assert len(base["finished"]) == 6
+    return cfg, params, prompts, gens, base
+
+
+@pytest.fixture(scope="module")
+def encdec_rig():
+    cfg = get_arch("seamless_m4t_medium").smoke.replace(dtype="float32")
+    params = st.init_params_fn(cfg)(jax.random.PRNGKey(4))
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, 12, dtype=np.int32)
+               for _ in range(6)]
+    frames = [np.asarray(rng.normal(size=(12, cfg.d_model)),
+                         np.float32) * 0.02 for _ in range(6)]
+    gens = [8, 6, 8, 5, 8, 6]
+    base = srv.serve(params, cfg, prompts, slots=3, gen=8, gens=gens,
+                     cache_kind="paged", block_k=8, frames=frames)
+    assert len(base["finished"]) == 6
+    return cfg, params, prompts, frames, gens, base
+
+
+@pytest.fixture(scope="module")
+def dense_rig():
+    cfg = get_arch("tinyllama_1p1b").smoke.replace(dtype="float32")
+    params = st.init_params_fn(cfg)(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, 16, dtype=np.int32)
+               for _ in range(6)]
+    gens = [12, 10, 12, 8, 12, 10]
+    return cfg, params, prompts, gens
+
+
+def _reference_tokens(engine, prompt_count, gens):
+    """No-scheduler greedy decode through a *single-slot* engine: admit one
+    request into slot 0, step it alone to completion.  What the multi-slot
+    scheduler must reproduce token-for-token.
+
+    Engines with pool-static quantization scales calibrate them from the
+    *first* admission (request 0) — replicated here by admitting and
+    releasing request 0 before the request under test, exactly as the
+    serve run fixed the scales."""
+    out = {}
+    for rid in range(prompt_count):
+        cache = engine.start_run()
+        if rid != 0:
+            _, cache = engine.admit(cache, 0, 0)
+            cache = engine.release(cache, 0)
+        last1, cache = engine.admit(cache, 0, rid)
+        toks = [int(jnp.argmax(last1[0]))]
+        tokens = jnp.zeros((engine.slots,), jnp.int32).at[0].set(toks[0])
+        while len(toks) < gens[rid]:
+            if engine.alloc is not None:
+                upto = len(engine.prompts[rid]) + len(toks)
+                while engine.short(0, upto) > 0:
+                    start, ids = engine.grow_blocks(0, engine.short(0, upto))
+                    for j, b in enumerate(ids):
+                        cache = engine.grow_write(cache, 0, start + j, b)
+            logits, cache = engine.decode(tokens, cache)
+            nxt = int(jnp.argmax(logits[0]))
+            toks.append(nxt)
+            tokens = tokens.at[0].set(nxt)
+        cache = engine.release(cache, 0)
+        assert engine.leaked() == 0
+        out[rid] = toks
+    return out
+
+
+# ---------------------------------------------------------------------------
+# scheduler transparency: multi-slot serve == single-slot engine reference
+# ---------------------------------------------------------------------------
+
+def test_ssm_serve_matches_singleslot_engine(ssm_rig):
+    cfg, params, prompts, gens, base = ssm_rig
+    eng = SSMStateEngine(params, cfg, prompts, slots=1, max_len=40)
+    ref = _reference_tokens(eng, len(prompts), gens)
+    assert base["finished"] == ref
+
+
+def test_encdec_serve_matches_singleslot_engine(encdec_rig):
+    cfg, params, prompts, frames, gens, base = encdec_rig
+    eng = EncDecEngine(params, cfg, prompts, frames=frames, slots=1,
+                       max_len=30, block_k=8)
+    ref = _reference_tokens(eng, len(prompts), gens)
+    assert base["finished"] == ref
+
+
+def test_dense_serve_matches_singleslot_engine(dense_rig):
+    cfg, params, prompts, gens = dense_rig
+    base = srv.serve(params, cfg, prompts, slots=3, gen=12, gens=gens,
+                     cache_kind="paged", block_k=8, max_len=40)
+    eng = PagedKVEngine(params, cfg, prompts, slots=1, max_len=40,
+                        block_k=8)
+    ref = _reference_tokens(eng, len(prompts), gens)
+    assert base["finished"] == ref
+
+
+# ---------------------------------------------------------------------------
+# bitwise preempt/resume, per engine
+# ---------------------------------------------------------------------------
+
+def test_ssm_forced_preempt_resumes_bitwise(ssm_rig):
+    """The SSM engine has no pool to exhaust, so preemption is exercised
+    with the forced-preemption fault: snapshot, re-queue, re-prefill,
+    replay — outputs must not move."""
+    cfg, params, prompts, gens, base = ssm_rig
+    stats = srv.serve(params, cfg, prompts, slots=3, gen=10, gens=gens,
+                      cache_kind="paged",
+                      fault_plan=FaultPlan(preempt_step=3, preempt_slot=1))
+    assert stats["preemptions"] == 1
+    assert stats["resumes"] == 1
+    assert stats["finished"] == base["finished"]
+    assert stats["leaked_blocks"] == 0
+    assert stats["slot_prefills"] == len(prompts) + 1
+
+
+def test_ssm_retired_slot_state_does_not_drift(ssm_rig):
+    """Round-trip idempotency of the int8 state residency: a retired slot's
+    slab keeps requantizing to the same bytes while co-residents decode, so
+    staggered gens (slots idle at different times) change nothing."""
+    cfg, params, prompts, gens, base = ssm_rig
+    stats = srv.serve(params, cfg, prompts, slots=2, gen=10, gens=gens,
+                      cache_kind="paged")     # different churn pattern
+    assert stats["finished"] == base["finished"]
+
+
+def test_encdec_overcommit_resumes_bitwise(encdec_rig):
+    """Genuine pool pressure on the encdec dynamic self-KV region; the
+    carved cross bank stays put (carved != leaked) while victims churn."""
+    cfg, params, prompts, frames, gens, base = encdec_rig
+    stats = srv.serve(params, cfg, prompts, slots=3, gen=8, gens=gens,
+                      cache_kind="paged", block_k=8, frames=frames,
+                      pool_blocks=7)
+    assert stats["preemptions"] > 0
+    assert stats["resumes"] == stats["preemptions"]
+    assert stats["finished"] == base["finished"]
+    assert stats["leaked_blocks"] == 0
+
+
+def test_encdec_forced_preempt_resumes_bitwise(encdec_rig):
+    cfg, params, prompts, frames, gens, base = encdec_rig
+    stats = srv.serve(params, cfg, prompts, slots=3, gen=8, gens=gens,
+                      cache_kind="paged", block_k=8, frames=frames,
+                      fault_plan=FaultPlan(preempt_step=2, preempt_slot=0))
+    assert stats["preemptions"] == 1
+    assert stats["finished"] == base["finished"]
+    assert stats["leaked_blocks"] == 0
+
+
+def test_dense_forced_preempt_resumes_bitwise(dense_rig):
+    cfg, params, prompts, gens = dense_rig
+    base = srv.serve(params, cfg, prompts, slots=3, gen=12, gens=gens,
+                     cache_kind="paged", block_k=8, max_len=40)
+    stats = srv.serve(params, cfg, prompts, slots=3, gen=12, gens=gens,
+                      cache_kind="paged", block_k=8, max_len=40,
+                      fault_plan=FaultPlan(preempt_step=4, preempt_slot=2))
+    assert stats["preemptions"] == 1
+    assert stats["finished"] == base["finished"]
+    assert stats["leaked_blocks"] == 0
+
+
+def test_sampled_preempt_resume_bitwise(dense_rig):
+    """The upgraded sampling contract: keys derive from (seed, rid, tokens
+    drawn), not a shared stream, so even a *sampled* run resumes bitwise
+    across preemptions — the old greedy-only caveat is gone."""
+    cfg, params, prompts, gens = dense_rig
+    kw = dict(cache_kind="paged", block_k=8, max_len=40,
+              temperature=0.8, top_p=0.9, gen=12, gens=gens)
+    base = srv.serve(params, cfg, prompts, slots=3, **kw)
+    squeezed = srv.serve(params, cfg, prompts, slots=3, pool_blocks=7, **kw)
+    assert squeezed["preemptions"] > 0
+    assert squeezed["finished"] == base["finished"]
+    assert squeezed["leaked_blocks"] == 0
+
+
+def test_sampled_seed_and_rid_isolation(dense_rig):
+    """Changing the seed changes sampled outputs; each request's stream is
+    independent of scheduling (slots=1 vs slots=3 identical)."""
+    cfg, params, prompts, gens = dense_rig
+    kw = dict(cache_kind="paged", block_k=8, max_len=40,
+              temperature=0.8, top_p=0.9, gen=12, gens=gens)
+    a = srv.serve(params, cfg, prompts, slots=3, **kw)
+    b = srv.serve(params, cfg, prompts, slots=1, **kw)
+    assert a["finished"] == b["finished"]
+
+
+# ---------------------------------------------------------------------------
+# engine construction / family dispatch
+# ---------------------------------------------------------------------------
+
+def test_family_dispatch_rejections(ssm_rig, encdec_rig):
+    cfg_s, params_s, prompts_s, gens_s, _ = ssm_rig
+    cfg_e, params_e, prompts_e, frames, *_ = encdec_rig
+    with pytest.raises(ValueError, match="paged KV cache"):
+        srv.serve(params_s, cfg_s, prompts_s, slots=2, gen=4,
+                  cache_kind="paged", pool_blocks=8)
+    with pytest.raises(ValueError, match="encoder frames"):
+        srv.serve(params_e, cfg_e, prompts_e, slots=2, gen=4,
+                  cache_kind="paged")
+    hybrid = get_arch("zamba2_2p7b").smoke
+    with pytest.raises(ValueError, match="no cache engine"):
+        srv.make_engine({}, hybrid, prompts_s, slots=2, max_len=32)
+
+
+def test_encdec_carve_accounting(encdec_rig):
+    """The cross bank is a fixed carve on top of the dynamic pool: carved
+    blocks never show up as live, and the leak check (live == 0) still
+    holds at drain with the bank resident."""
+    cfg, params, prompts, frames, gens, _ = encdec_rig
+    eng = EncDecEngine(params, cfg, prompts, frames=frames, slots=3,
+                      max_len=30, block_k=8)
+    stats = run_schedule(eng, prompts, gens=gens)
+    cross_bps = paged_kv.blocks_per_seq(frames[0].shape[0], 8)
+    assert eng.alloc.carved_count == 3 * cross_bps
+    assert eng.alloc.live_count == 0
+    assert stats["leaked_blocks"] == 0
+    assert len(stats["finished"]) == len(prompts)
+
+
+# ---------------------------------------------------------------------------
+# wall-clock deadlines
+# ---------------------------------------------------------------------------
+
+def test_deadline_ms_expires_and_accounts(dense_rig):
+    """An unmeetable wall-clock deadline expires every request (admission
+    itself consumes the budget); accounting must balance and nothing
+    leaks.  A generous deadline changes nothing bitwise."""
+    cfg, params, prompts, gens = dense_rig
+    base = srv.serve(params, cfg, prompts, slots=3, gen=12, gens=gens,
+                     cache_kind="paged", block_k=8, max_len=40)
+    tight = srv.serve(params, cfg, prompts, slots=3, gen=12, gens=gens,
+                      cache_kind="paged", block_k=8, max_len=40,
+                      deadline_ms=1e-3)
+    assert len(tight["expired"]) > 0
+    assert set(tight["finished"]) | set(tight["expired"]) == set(range(6))
+    assert tight["health"]["counters"]["deadline_cancelled"] == \
+        len(tight["expired"])
+    assert tight["leaked_blocks"] == 0
+    slack = srv.serve(params, cfg, prompts, slots=3, gen=12, gens=gens,
+                      cache_kind="paged", block_k=8, max_len=40,
+                      deadline_ms=600_000.0)
+    assert slack["expired"] == {}
+    assert slack["finished"] == base["finished"]
